@@ -1,0 +1,187 @@
+"""Performance hillclimb: hypothesis -> change -> re-lower -> measure.
+
+Three cells (worst roofline fraction / most collective-bound / most
+representative of MatPIM's technique) are iterated on the dominant
+roofline term; every named iteration below is a concrete hypothesis with a
+napkin prediction (see EXPERIMENTS.md §Perf for the log). Run:
+
+    PYTHONPATH=src python -m benchmarks.hillclimb [--target olmo|arctic|yi]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+
+from repro.configs import TrainConfig
+from repro.launch.dryrun import run_cell
+
+RESULTS = "results/hillclimb"
+
+
+# Each iteration: (name, kwargs for run_cell, hypothesis string)
+ITERATIONS = {
+    # ------------------------------------------------------------------
+    # Target 1: olmo-1b train_4k — collective-bound (AR of activations).
+    # ------------------------------------------------------------------
+    "olmo": [
+        ("baseline", {},
+     "Megatron-TP activations: 2 all-reduces/layer of (tokens_dev, D) "
+     "fwd+bwd ≈ 60 GB/dev -> collective-dominated."),
+        ("it1-dp-fsdp",
+         dict(rules={"heads": None, "mlp": None, "kv_heads": None,
+                     "batch": ("pod", "data", "model")}),
+     "Pure-DP activations; params stay fully sharded (TP+FSDP layout) and "
+     "are all-gathered per layer on use: gathers ≈ 3 passes × 2.4 GB wire "
+     "vs 60 GB of activation ARs — predict ~10× less collective traffic. "
+     "(First attempt leaked the rule override into param shardings and "
+     "REGRESSED 50×: params fell back to 16-way sharding and every layer "
+     "re-gathered through an involuntary rematerialization — fixed by "
+     "separating PARAM_RULES from activation rules.)"),
+        ("it2-dp-fsdp-noremat",
+         dict(rules={"heads": None, "mlp": None, "kv_heads": None,
+                     "batch": ("pod", "data", "model")},
+              tc=TrainConfig(remat="none", opt_state_dtype="int8",
+                             microbatches=8)),
+     "With collectives fixed, compute term has 33% remat overhead; "
+     "memory headroom allows remat=none -> compute_s × 0.75."),
+        ("it3-tp-seq-batch",
+         dict(rules={"batch": ("pod", "data")},
+              tc=TrainConfig(remat="full", opt_state_dtype="int8",
+                             microbatches=16)),
+     "Alternative: keep Megatron TP but shrink per-microbatch activation "
+     "ARs via more microbatches (16): AR bytes/step constant but overlap "
+     "window smaller — expect ≈ baseline collective (refutation probe: "
+     "AR volume is microbatch-invariant)."),
+        ("it4-dp-fsdp-mb2",
+         dict(rules={"heads": None, "mlp": None, "kv_heads": None},
+              tc=TrainConfig(remat="full", opt_state_dtype="int8",
+                             microbatches=2)),
+     "it1/it2 collective whale = gradient all-reduce ×8 microbatch trips "
+     "(1.26 TB). Keep DP over 'data' only (16-way, no B=1 pathology) and "
+     "drop to 2 microbatches: grad AR 2.4 GB × 2 + param gathers ~7 GB → "
+     "predict wire ~0.5 s vs baseline 2.5 s (5×) with compute 0.214 s."),
+        ("it5-dp-fsdp-mb1",
+         dict(rules={"heads": None, "mlp": None, "kv_heads": None},
+              tc=TrainConfig(remat="full", opt_state_dtype="int8",
+                             microbatches=1)),
+     "Last grad-AR halving: one microbatch -> one gradient reduction per "
+     "step. Predict collective 0.70 -> ~0.4 s; peak memory grows (13 GB "
+     "f32 logits/device) but remat keeps it under control."),
+    ],
+    # ------------------------------------------------------------------
+    # Target 2: arctic-480b train_4k — most collective-bound cell.
+    # ------------------------------------------------------------------
+    "arctic": [
+        ("baseline", {},
+     "TP activations + EP experts: dense-path ARs of (tokens, 7168) "
+     "dominate (34s collective vs 3s compute)."),
+        ("it1-dp-fsdp-ep",
+         dict(rules={"heads": None, "mlp": None, "kv_heads": None}),
+     "DP activations (batch stays 16-way data so the 32 routing groups "
+     "still shard), FSDP+EP params gathered on use: dense ARs vanish; "
+     "MoE all-to-alls + param gathers remain. Predict collective "
+     "~34s -> ~4-8s."),
+        ("it2-capacity-1.0",
+         dict(rules={"heads": None, "mlp": None, "kv_heads": None},
+              cfg_overrides=dict(capacity_factor=1.0)),
+     "Dispatch/expert-FLOPs scale with capacity factor: 1.25 -> 1.0 cuts "
+     "MoE compute & a2a bytes 20% (drops ~2% of tokens at the margin)."),
+        ("it3-moe-group-8k",
+         dict(rules={"heads": None, "mlp": None, "kv_heads": None},
+              cfg_overrides=dict(capacity_factor=1.0),
+              moe_group=8192),
+     "Bigger routing groups halve the number of dispatch einsums & their "
+     "fixed overheads; capacity smoothing improves (fewer drops)."),
+        ("it4-dp-ep-mb2",
+         dict(rules={"heads": None, "mlp": None, "kv_heads": None},
+              cfg_overrides=dict(capacity_factor=1.0),
+              tc=TrainConfig(remat="full", opt_state_dtype="int8",
+                             microbatches=2)),
+     "Same grad-AR-×-microbatch whale as olmo (1.22 TB of AR): 8 -> 2 "
+     "microbatches cuts the in-loop gradient reductions 4×; predict "
+     "collective 33 s -> ~9 s, wire 83 -> ~22 s."),
+    ],
+    # ------------------------------------------------------------------
+    # Target 3: yi-34b decode_32k — the paper-representative cell
+    # (decode = tall-skinny matvec; cache_seq sharding = MatPIM split-K).
+    # ------------------------------------------------------------------
+    "yi": [
+        ("baseline", {},
+     "56 heads % 16 ≠ 0 -> attention params only data-sharded; decode "
+     "gathers ~14 GB of attn weights per token step."),
+        ("it1-kv-cache-shard",
+         dict(rules={"cache_seq": None, "kv_heads": "model"}),
+     "Counter-hypothesis: shard cache by kv_heads instead of seq — but "
+     "kv=8 % 16 ≠ 0 so the cache replicates; expect WORSE memory. "
+     "(Run to confirm the seq/split-K choice is right.)"),
+        ("it2-head-pad-64",
+         dict(cfg_overrides=dict(n_heads=64)),
+     "Pad 56 -> 64 query heads (zero weights): heads now shard 16-way, "
+     "attention params stay resident (no gather); +14% attn FLOPs on a "
+     "term that is 1000× off dominance. Predict collective ~0.29s -> "
+     "~0.02s, step becomes memory-bound (the decode roofline)."),
+        ("it3-head-pad+batch-all",
+         dict(cfg_overrides=dict(n_heads=64),
+              rules={"batch": ("pod", "data"),
+                     "mlp": "model", "heads": "model"}),
+     "Keep TP for decode (weight-stationary) + batch over data only; "
+     "confirm memory-bound endpoint: step_s ≈ params+cache bytes / HBM."),
+    ],
+}
+
+CELLS = {
+    "olmo": ("olmo-1b", "train_4k"),
+    "arctic": ("arctic-480b", "train_4k"),
+    "yi": ("yi-34b", "decode_32k"),
+}
+
+
+def fmt(res):
+    t = res["roofline"]
+    return (f"comp={t['compute_s']:.3f}s mem={t['memory_s']:.3f}s "
+            f"coll={t['collective_s']:.3f}s wire={t['collective_wire_s']:.3f}s "
+            f"dom={res['dominant'][:4]} peakGB={res['memory']['peak_bytes']/1e9:.0f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target", default=None,
+                    choices=list(CELLS) + [None])
+    args = ap.parse_args()
+    os.makedirs(RESULTS, exist_ok=True)
+    targets = [args.target] if args.target else list(CELLS)
+    for tgt in targets:
+        arch, shape = CELLS[tgt]
+        print(f"\n=== hillclimb {tgt}: {arch} × {shape} ===")
+        for name, kw, hyp in ITERATIONS[tgt]:
+            out = os.path.join(RESULTS, f"{tgt}__{name}.json")
+            if os.path.exists(out):
+                res = json.load(open(out))
+                print(f"[cached] {name}: {fmt(res)}")
+                continue
+            kw = dict(kw)
+            moe_group = kw.pop("moe_group", None)
+            if moe_group:
+                import repro.models.layers as L
+                L.MOE_GROUP = moe_group
+            try:
+                res = run_cell(arch, shape, **kw)
+                res["hypothesis"] = hyp
+                res["iteration"] = name
+            except Exception as e:  # noqa: BLE001
+                res = {"ok": False, "iteration": name, "error": str(e)}
+            finally:
+                if moe_group:
+                    import repro.models.layers as L
+                    L.MOE_GROUP = 4096
+            with open(out, "w") as f:
+                json.dump(res, f, indent=1)
+            if res.get("ok"):
+                print(f"[done] {name}: {fmt(res)}")
+            else:
+                print(f"[FAIL] {name}: {res.get('error')}")
+
+
+if __name__ == "__main__":
+    main()

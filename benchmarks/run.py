@@ -1,0 +1,162 @@
+"""Benchmark harness — one function per paper table/figure + kernel micro-
+benchmarks + the roofline collector. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def _timeit(fn, n=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def bench_table1_matvec(quick=False):
+    """Paper Table I: matrix-vector multiplication latency [cycles]."""
+    from repro.core import latency
+    rows = latency.build_table1()
+    print(latency.format_rows(rows, "Table I: matrix-vector mult [cycles]"),
+          file=sys.stderr)
+    for r in rows:
+        paper = r.paper_proposed or (
+            r.paper_baseline if isinstance(r.paper_baseline, int) else None)
+        ratio = round(r.ours / paper, 3) if paper else ""
+        print(f"table1/{r.name}/{r.config.replace(' ', '_')},"
+              f"{r.ours},cycles_ratio_vs_paper={ratio}")
+
+
+def bench_table2_conv(quick=False):
+    """Paper Table II: 2D convolution latency [cycles]."""
+    from repro.core import latency
+    rows = latency.build_table2()
+    print(latency.format_rows(rows, "Table II: 2D convolution [cycles]"),
+          file=sys.stderr)
+    for r in rows:
+        paper = r.paper_proposed or (
+            r.paper_baseline if isinstance(r.paper_baseline, int) else None)
+        ratio = round(r.ours / paper, 3) if paper else ""
+        print(f"table2/{r.name}/{r.config.replace(' ', '_')},"
+              f"{r.ours},cycles_ratio_vs_paper={ratio}")
+
+
+def bench_kernels(quick=False):
+    """Pallas kernels (interpret mode on CPU) vs jnp oracles: wall time."""
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.binary_matmul import binary_matmul
+    from repro.kernels.conv2d_shift import conv2d_shift
+    from repro.kernels.splitk_matvec import splitk_matvec
+
+    rng = np.random.default_rng(0)
+    M = 128 if quick else 256
+    a = ref.pack_bits(jnp.asarray(rng.choice([-1, 1], (M, 512)), jnp.float32))
+    b = ref.pack_bits(jnp.asarray(rng.choice([-1, 1], (M, 512)), jnp.float32))
+    us = _timeit(lambda: binary_matmul(a, b, interpret=True).block_until_ready())
+    us_ref = _timeit(lambda: ref.binary_matmul_packed_ref(a, b, 512)
+                     .block_until_ready())
+    print(f"kernels/binary_matmul_{M}x{M}x512,{us:.0f},interp_vs_ref="
+          f"{us/us_ref:.2f}")
+
+    A = jnp.asarray(rng.standard_normal((512, 1024)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(1024), jnp.float32)
+    us = _timeit(lambda: splitk_matvec(A, x, interpret=True).block_until_ready())
+    print(f"kernels/splitk_matvec_512x1024,{us:.0f},splitk=8way")
+
+    img = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((3, 3)), jnp.float32)
+    us = _timeit(lambda: conv2d_shift(img, k, interpret=True).block_until_ready())
+    print(f"kernels/conv2d_shift_128x128_3x3,{us:.0f},im2col_free=true")
+
+
+def bench_train_throughput(quick=False):
+    """Reduced-config train-step wall time per arch family (CPU)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import TrainConfig, get_config
+    from repro.models import build_model
+    from repro.models.spec import init_params
+    from repro.train import make_train_step
+
+    archs = ["olmo-1b", "mamba2-370m"] if quick else [
+        "olmo-1b", "mamba2-370m", "granite-moe-1b-a400m", "whisper-tiny"]
+    for arch in archs:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params = init_params(model.specs(), jax.random.PRNGKey(0), cfg.dtype)
+        step, opt = make_train_step(model, TrainConfig())
+        s = opt.init(params)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 64)),
+                                       jnp.int32),
+                 "targets": jnp.asarray(rng.integers(0, cfg.vocab, (4, 64)),
+                                        jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros((4, cfg.enc_seq, cfg.d_model),
+                                        jnp.dtype(cfg.dtype))
+        jstep = jax.jit(step)
+        p, st, _ = jstep(params, s, batch)  # compile
+
+        def run():
+            nonlocal p, st
+            p, st, m = jstep(p, st, batch)
+            jax.block_until_ready(m["loss"])
+
+        us = _timeit(run)
+        toks = 4 * 64
+        print(f"train/{arch}_smoke,{us:.0f},tok_per_s={toks/(us/1e6):.0f}")
+
+
+def bench_roofline(quick=False):
+    """Summarize the dry-run roofline JSONs (results/)."""
+    import glob
+    import json
+    files = sorted(glob.glob("results/*.json"))
+    if not files:
+        print("roofline/none,0,run_dryrun_first=true")
+        return
+    for f in files:
+        d = json.load(open(f))
+        if not d.get("ok"):
+            print(f"roofline/{d['arch']}_{d['shape']}_{d.get('mesh')},0,FAILED")
+            continue
+        t = d["roofline"]
+        terms = {k: t[k] for k in ("compute_s", "memory_s", "collective_s")}
+        bound = max(terms, key=terms.get).replace("_s", "")
+        step_s = max(terms.values())
+        mfu = (d["model_flops_total"] / d["chips"] / 197e12) / step_s \
+            if step_s else 0
+        print(f"roofline/{d['arch']}_{d['shape']}_{d['mesh']},"
+              f"{step_s*1e6:.0f},bound={bound};roofline_frac={mfu:.3f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    benches = {
+        "table1": bench_table1_matvec,
+        "table2": bench_table2_conv,
+        "kernels": bench_kernels,
+        "train": bench_train_throughput,
+        "roofline": bench_roofline,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        fn(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

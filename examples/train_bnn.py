@@ -1,0 +1,58 @@
+"""End-to-end driver: train the MatPIM BNN model (binary XNOR FFNs — the
+paper's §II-B as a first-class layer) for a few hundred steps on synthetic
+data, with checkpointing and the fault-tolerant loop.
+
+    PYTHONPATH=src python examples/train_bnn.py [--steps 300]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import TrainConfig, get_config
+from repro.data.pipeline import SyntheticLM
+from repro.distributed.fault_tolerance import run_resilient_loop
+from repro.models import build_model
+from repro.models.spec import init_params
+from repro.train import make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--full", action="store_true",
+                help="full matpim-bnn config (default: reduced)")
+args = ap.parse_args()
+
+cfg = get_config("matpim-bnn")
+if not args.full:
+    cfg = cfg.reduced()
+print(f"training {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+      f"binary_ffn={cfg.binary_ffn}")
+
+model = build_model(cfg)
+params = init_params(model.specs(), jax.random.PRNGKey(0), cfg.dtype)
+tc = TrainConfig(lr=3e-3, remat="none")
+step_fn, opt = make_train_step(model, tc)
+jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+src = SyntheticLM(cfg, batch=8, seq=64, seed=0)
+ck = Checkpointer("/tmp/bnn_ckpt")
+
+def batch_at(i):
+    return {k: jnp.asarray(v) for k, v in src.at_step(i).items()}
+
+t0 = time.time()
+losses = []
+
+def on_metrics(step, m):
+    losses.append(float(m["loss"]))
+    if step % 25 == 0:
+        print(f"step {step:4d}  loss {losses[-1]:.4f}  "
+              f"({(time.time()-t0)/(step+1):.3f}s/step)", flush=True)
+
+state = run_resilient_loop(jstep, (params, opt.init(params)), batch_at, ck,
+                           n_steps=args.steps, ckpt_every=100,
+                           on_metrics=on_metrics)
+print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f}); "
+      f"binary-FFN model trained through the straight-through estimator.")
+assert losses[-1] < losses[0]

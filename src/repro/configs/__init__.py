@@ -1,0 +1,6 @@
+"""Architecture configs — one module per assigned arch + registry."""
+from .base import ModelConfig, ShapeConfig, SHAPES, TrainConfig, shapes_for
+from .registry import ASSIGNED, REGISTRY, get_config
+
+__all__ = ['ModelConfig', 'ShapeConfig', 'SHAPES', 'TrainConfig',
+           'shapes_for', 'ASSIGNED', 'REGISTRY', 'get_config']

@@ -1,0 +1,23 @@
+"""MatPIM core: cycle-accurate crossbar reproduction of the paper.
+
+Public API:
+    Crossbar               — stateful-logic simulator (validates + counts)
+    MatvecPlan             — §II-A balanced full-precision matrix-vector
+    BinaryMatvecPlan       — §II-B partition-tree binary matrix-vector
+    ConvPlan               — §III-A/B input-parallel balanced convolution
+    BinaryConvPlan         — §III-C binary convolution
+    latency                — Table I/II regeneration + published numbers
+"""
+from .binary_conv import BinaryConvPlan, matpim_binary_conv2d
+from .binary_matvec import (BinaryMatvecPlan, NaiveBinaryMatvecPlan,
+                            matpim_binary_matvec)
+from .conv import ConvPlan, matpim_conv2d
+from .crossbar import Crossbar, SchedulingError, decode_uint, encode_uint
+from .matvec import MatvecPlan, matpim_matvec
+
+__all__ = [
+    "BinaryConvPlan", "BinaryMatvecPlan", "ConvPlan", "Crossbar",
+    "MatvecPlan", "NaiveBinaryMatvecPlan", "SchedulingError",
+    "decode_uint", "encode_uint", "matpim_binary_conv2d",
+    "matpim_binary_matvec", "matpim_conv2d", "matpim_matvec",
+]

@@ -1,0 +1,148 @@
+"""Latency model + Table I/II reproduction.
+
+The cycle counts are *derived from the generated programs themselves*
+(``len(plan.program)``), so the "model" is exact by construction and agrees
+with the executed simulator — tests enforce that executing a program takes
+exactly ``len(program)`` cycles.
+
+Published MatPIM numbers (Tables I & II) are stored here for side-by-side
+comparison. Our absolute counts differ by a bounded factor (documented in
+EXPERIMENTS.md) because the reference per-primitive gate counts (MultPIM
+normalization) are not public; the *structure* (which dimensions are
+supported, how latency scales, and the binary-vs-naive speedups) reproduces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from .binary_conv import BinaryConvPlan
+from .binary_matvec import BinaryMatvecPlan, NaiveBinaryMatvecPlan
+from .conv import ConvPlan
+from .isa import ColOp, InitOp, RowOp
+from .matvec import MatvecPlan
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    config: str
+    ours: Optional[int]
+    paper_baseline: Optional[object]
+    paper_proposed: Optional[int]
+    note: str = ""
+
+
+# Published numbers -----------------------------------------------------------
+
+TABLE1_PAPER = {
+    # (m, n, N): (baseline, proposed)
+    (1024, 8, 32): (4657, 4657),
+    (512, 16, 32): ("Not Supported", 5367),
+    (256, 32, 32): ("Not Supported", 5822),
+    (128, 64, 32): ("Not Supported", 6151),
+    (1024, 384, 1): (14770, 383),
+}
+
+TABLE2_PAPER = {
+    # (m, n, k, N): (baseline, proposed)
+    (1024, 4, 3, 32): (28760, 15352),
+    (1024, 8, 3, 32): ("Not Supported", 39897),
+    (512, 16, 3, 32): ("Not Supported", 49092),
+    (256, 32, 3, 32): ("Not Supported", 49592),
+    (128, 64, 3, 32): ("Not Supported", 49824),
+    (1024, 8, 5, 32): ("Not Supported", 81305),
+    (512, 16, 5, 32): ("Not Supported", 127728),
+    (256, 32, 5, 32): ("Not Supported", 128220),
+    (128, 64, 5, 32): ("Not Supported", 128436),
+    (1024, 256, 3, 1): (45312, 3805),
+}
+
+
+# Cycle counts from generated programs ---------------------------------------
+
+
+def matvec_cycles(m: int, n: int, N: int, alpha: int) -> int:
+    return MatvecPlan(m, n, N, alpha).cycles
+
+
+def binary_matvec_cycles(m: int, n: int) -> int:
+    return BinaryMatvecPlan(m, n).cycles
+
+
+def naive_binary_matvec_cycles(m: int, n: int) -> int:
+    return NaiveBinaryMatvecPlan(m, n).cycles
+
+
+def conv_cycles(m: int, n: int, k: int, N: int, **kw) -> int:
+    return ConvPlan(m, n, k, N, **kw).cycles
+
+
+def binary_conv_cycles(m: int, n: int, k: int) -> int:
+    return BinaryConvPlan(m, n, k).cycles
+
+
+def serialized_cycles(program) -> int:
+    """Latency with partition parallelism disabled — the naive baseline
+    analog for algorithms whose speedup comes from concurrent partitions.
+    Every co-scheduled gate runs in its own cycle; bulk inits stay 1 cycle.
+    """
+    total = 0
+    for cyc in program:
+        if any(isinstance(op, InitOp) for op in cyc):
+            total += 1
+        else:
+            total += max(1, len(cyc))
+    return total
+
+
+# Table builders ---------------------------------------------------------------
+
+
+def build_table1() -> List[Row]:
+    rows: List[Row] = []
+    alpha_for = {(1024, 8): 1, (512, 16): 2, (256, 32): 4, (128, 64): 8}
+    for (m, n, N), (pb, pp) in TABLE1_PAPER.items():
+        if N == 1:
+            fast = binary_matvec_cycles(m, n)
+            naive = naive_binary_matvec_cycles(m, n)
+            rows.append(Row("binary-mv-naive", f"{m}x{n} N=1", naive, pb, None,
+                            "baseline: serial counter popcount"))
+            rows.append(Row("binary-mv", f"{m}x{n} N=1", fast, None, pp,
+                            f"speedup {naive/fast:.1f}x (paper {pb/pp:.1f}x)"))
+        else:
+            a = alpha_for[(m, n)]
+            ours = matvec_cycles(m, n, N, a)
+            rows.append(Row("matvec", f"{m}x{n} N={N} α={a}", ours, pb, pp))
+    return rows
+
+
+def build_table2() -> List[Row]:
+    rows: List[Row] = []
+    for (m, n, k, N), (pb, pp) in TABLE2_PAPER.items():
+        if N == 1:
+            plan = BinaryConvPlan(m, n, k)
+            fast = plan.cycles
+            naive = serialized_cycles(plan.program)
+            rows.append(Row("binary-conv-naive", f"{m}x{n} {k}x{k} N=1", naive,
+                            pb, None, "partition parallelism disabled"))
+            rows.append(Row("binary-conv", f"{m}x{n} {k}x{k} N=1", fast, None,
+                            pp, f"speedup {naive/fast:.1f}x (paper {pb/pp:.1f}x)"))
+        else:
+            plan = ConvPlan(m, n, k, N)
+            note = f"α={plan.alpha}" + (" stream-K" if plan.stream_kernel else "")
+            rows.append(Row("conv", f"{m}x{n} {k}x{k} N={N}", plan.cycles,
+                            pb, pp, note))
+    return rows
+
+
+def format_rows(rows: List[Row], title: str) -> str:
+    lines = [title, "-" * len(title),
+             f"{'algo':<18} {'config':<22} {'ours':>8} {'paper-base':>12} "
+             f"{'paper-prop':>10}  note"]
+    for r in rows:
+        pb = str(r.paper_baseline) if r.paper_baseline is not None else "-"
+        pp = str(r.paper_proposed) if r.paper_proposed is not None else "-"
+        lines.append(f"{r.name:<18} {r.config:<22} {r.ours or '-':>8} "
+                     f"{pb:>12} {pp:>10}  {r.note}")
+    return "\n".join(lines)

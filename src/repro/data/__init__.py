@@ -1,0 +1,2 @@
+from .pipeline import FileTokens, SyntheticLM, make_global_batch
+__all__ = ["FileTokens", "SyntheticLM", "make_global_batch"]

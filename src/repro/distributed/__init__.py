@@ -1,0 +1,6 @@
+"""Distribution: logical-axis sharding, meshes, fault tolerance."""
+from .sharding import (RULES, constrain, current_mesh, named_sharding,
+                       resolve_spec, tree_shardings, use_mesh)
+
+__all__ = ["RULES", "constrain", "current_mesh", "named_sharding",
+           "resolve_spec", "tree_shardings", "use_mesh"]

@@ -1,0 +1,143 @@
+"""Logical-axis sharding: MaxText-style rules resolved against the mesh.
+
+Every parameter spec and activation constraint names *logical* axes
+('batch', 'heads', 'mlp', …). ``RULES`` maps them to mesh axes; resolution
+is divisibility-aware — if a tensor dim doesn't divide the mesh axis it
+falls back to replication (e.g. whisper's 6 heads on a 16-way model axis,
+or an un-padded vocab).
+
+The 'cache_seq' rule is MatPIM's block-matvec insight at mesh level: the
+decode KV cache's sequence axis is sharded over 'model', so the attention
+contraction becomes partial sums + a tree reduction (psum) — exactly the
+paper's α-block split with logarithmic reduction, with ICI links playing
+the inter-partition transistors.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes) — ACTIVATIONS
+RULES = {
+    "batch": ("pod", "data"),
+    "experts": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "d_inner": "model",          # mamba inner dim (TP)
+    "cache_seq": "model",        # decode KV cache sequence axis (split-K)
+    "embed": None,
+    "head_dim": None,
+    "layers": None,
+    "seq": None,
+}
+
+# PARAMETERS additionally FSDP-shard the embed dim over 'data' (ZeRO-3 /
+# MaxText hybrid): TP over 'model' + fully-sharded params over 'data'.
+# XLA all-gathers each layer's weights on use; required to fit arctic-480b.
+PARAM_RULES = {**RULES, "embed": "data"}
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate a mesh (+ optional rule overrides) for constrain()/shardings."""
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, {**RULES, **(rules or {})})
+    try:
+        with mesh or contextlib.nullcontext():
+            yield
+    finally:
+        _ctx.state = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    st = getattr(_ctx, "state", None)
+    return st[0] if st else None
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape.get(a, 1)
+        return n
+    return mesh.shape.get(axis, 1)
+
+
+def resolve_spec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                 mesh: Mesh, rules: Optional[dict] = None) -> P:
+    """Logical axes -> PartitionSpec, dropping non-divisible assignments."""
+    rules = rules or (getattr(_ctx, "state", None) or (None, RULES))[1]
+    parts = []
+    used = set()  # a mesh axis may shard at most one dim (leftmost wins)
+    for dim, name in zip(shape, axes):
+        mesh_axis = rules.get(name) if name else None
+        if mesh_axis is None:
+            parts.append(None)
+            continue
+        if isinstance(mesh_axis, (tuple, list)):
+            mesh_axis = tuple(a for a in mesh_axis
+                              if a in mesh.axis_names and a not in used)
+            if not mesh_axis:
+                parts.append(None)
+                continue
+        elif mesh_axis not in mesh.axis_names or mesh_axis in used:
+            parts.append(None)
+            continue
+        if dim % _mesh_axis_size(mesh, mesh_axis) != 0:
+            parts.append(None)  # indivisible -> replicate
+        else:
+            parts.append(tuple(mesh_axis) if isinstance(mesh_axis, (tuple, list))
+                         else mesh_axis)
+            used.update(mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,))
+    # PartitionSpec forbids trailing Nones being significant; fine as-is
+    return P(*parts)
+
+
+def named_sharding(axes: Sequence[Optional[str]], shape: Sequence[int],
+                   mesh: Optional[Mesh] = None) -> NamedSharding:
+    mesh = mesh or current_mesh()
+    return NamedSharding(mesh, resolve_spec(axes, shape, mesh))
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    st = getattr(_ctx, "state", None)
+    if not st or st[0] is None:
+        return x
+    mesh, rules = st
+    spec = resolve_spec(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(axes_tree, abstract_tree, mesh: Optional[Mesh] = None,
+                   params: bool = False):
+    """Map a tree of logical-axes tuples + abstract arrays -> NamedShardings.
+
+    ``params=True`` applies PARAM_RULES (FSDP over 'data' on the embed dim).
+    """
+    mesh = mesh or current_mesh()
+    st = getattr(_ctx, "state", None)
+    act_rules = st[1] if st else RULES
+    # parameters ALWAYS use the canonical fully-sharded layout (TP over
+    # 'model' + FSDP over 'data'); use_mesh rule overrides apply to
+    # activations/caches only — so a hillclimb iteration can flip the
+    # activation strategy without destroying parameter residency.
+    rules = PARAM_RULES if params else act_rules
+    is_axes = lambda x: x is None or (isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x))
+    axes_leaves, _ = jax.tree.flatten(axes_tree, is_leaf=is_axes)
+    arr_leaves, treedef = jax.tree.flatten(abstract_tree)
+    assert len(axes_leaves) == len(arr_leaves)
+    out = [NamedSharding(mesh, resolve_spec(ax, arr.shape, mesh, rules))
+           for ax, arr in zip(axes_leaves, arr_leaves)]
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels adapting MatPIM's algorithmic insights.
+
+    binary_matmul   — XNOR-popcount GEMM (MatPIM §II-B → bit-packed VPU)
+    splitk_matvec   — split-K GEMV (MatPIM §II-A block/reduce → k-grid)
+    conv2d_shift    — im2col-free shift-and-add conv (MatPIM §III-A)
+    binary_conv2d   — channel-packed XNOR conv (MatPIM §III-C)
+
+Each kernel has a pure-jnp oracle in ``ref.py``; tests sweep shapes and
+dtypes in interpret mode (CPU) against the oracles.
+"""
+from . import ops, ref
+from .binary_matmul import binary_matmul
+from .conv2d_shift import binary_conv2d, conv2d_shift, conv2d_shift_tiled
+from .splitk_matvec import splitk_matvec
+
+__all__ = ["binary_matmul", "binary_conv2d", "conv2d_shift",
+           "conv2d_shift_tiled", "splitk_matvec", "ops", "ref"]

@@ -1,0 +1,70 @@
+"""Jit'd public wrappers around the Pallas kernels (+ CPU fallbacks).
+
+On CPU (this container) the kernels run with ``interpret=True``; on TPU they
+compile to Mosaic. ``use_pallas`` picks automatically. The wrappers are what
+models/ and the serving engine call.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .binary_matmul import binary_matmul
+from .conv2d_shift import binary_conv2d, conv2d_shift, conv2d_shift_tiled
+from .splitk_matvec import splitk_matvec
+
+pack_bits = ref.pack_bits
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def binary_dense(x: jnp.ndarray, w_packed: jnp.ndarray, K: int,
+                 use_pallas: bool | None = None) -> jnp.ndarray:
+    """±1 dense layer: x (..., K) real → sign-binarized → XNOR-GEMM vs packed
+    weights w (N, K/32). Returns (..., N) int32 ±1 dot values.
+
+    Straight-through binarization of activations; weights pre-packed.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, K)
+    xp = pack_bits(x2, axis=-1)
+    if use_pallas is None:
+        use_pallas = True
+    if use_pallas:
+        y = binary_matmul(xp, w_packed, interpret=not _on_tpu())
+    else:
+        y = ref.binary_matmul_packed_ref(xp, w_packed, K)
+    return y.reshape(*lead, -1)
+
+
+def matvec(a: jnp.ndarray, x: jnp.ndarray, use_pallas: bool | None = None
+           ) -> jnp.ndarray:
+    if use_pallas is None:
+        use_pallas = True
+    if use_pallas:
+        return splitk_matvec(a, x, interpret=not _on_tpu())
+    return ref.splitk_matvec_ref(a, x)
+
+
+def conv2d(a: jnp.ndarray, k: jnp.ndarray, tiled: bool = False,
+           use_pallas: bool | None = None) -> jnp.ndarray:
+    if use_pallas is None:
+        use_pallas = True
+    if not use_pallas:
+        return ref.conv2d_shift_ref(a, k)
+    fn = conv2d_shift_tiled if tiled else conv2d_shift
+    return fn(a, k, interpret=not _on_tpu())
+
+
+def conv2d_binary(a_packed: jnp.ndarray, k_packed: jnp.ndarray,
+                  use_pallas: bool | None = None) -> jnp.ndarray:
+    if use_pallas is None:
+        use_pallas = True
+    if use_pallas:
+        return binary_conv2d(a_packed, k_packed, interpret=not _on_tpu())
+    return ref.binary_conv2d_ref(a_packed, k_packed)

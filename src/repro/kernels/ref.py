@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_bits(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Pack a ±1 (or {0,1}) array into uint32 words along ``axis``.
+
+    +1 → bit 1, −1/0 → bit 0. Axis length must be a multiple of 32.
+    """
+    bits = (x > 0).astype(jnp.uint32)
+    bits = jnp.moveaxis(bits, axis, -1)
+    *lead, n = bits.shape
+    assert n % 32 == 0, "pack axis must be a multiple of 32"
+    words = bits.reshape(*lead, n // 32, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    packed = (words * weights).sum(axis=-1).astype(jnp.uint32)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def binary_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """±1 GEMM: C[i,j] = Σ_k a[i,k]·b[j,k]  with a,b ∈ {−1,+1}.
+
+    a: (M, K) ±1, b: (N, K) ±1 (note: b is stored K-major like the packed
+    kernel input). Returns int32 (M, N).
+    """
+    return jnp.einsum("mk,nk->mn", a.astype(jnp.int32), b.astype(jnp.int32))
+
+
+def binary_matmul_packed_ref(a_packed: jnp.ndarray, b_packed: jnp.ndarray,
+                             K: int) -> jnp.ndarray:
+    """Same contract as the kernel: packed uint32 inputs, ±1 dot output."""
+    x = a_packed[:, None, :] ^ b_packed[None, :, :]
+    match = K - jnp.sum(jnp.bitwise_count(x).astype(jnp.int32), axis=-1)
+    return 2 * match - K  # ⟨a,b⟩ = matches − mismatches
+
+
+def splitk_matvec_ref(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y = A @ x with f32 accumulation (A may be bf16)."""
+    return jnp.dot(a.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def conv2d_shift_ref(a: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Valid 2D convolution (no flip — cross-correlation, as MatPIM Alg. 1).
+
+    a: (H, W), k: (kh, kw). f32 accumulation.
+    """
+    H, W = a.shape
+    kh, kw = k.shape
+    out = jnp.zeros((H - kh + 1, W - kw + 1), jnp.float32)
+    for v in range(kh):
+        for h in range(kw):
+            out = out + a[v:H - kh + 1 + v, h:W - kw + 1 + h].astype(jnp.float32) \
+                * k[v, h].astype(jnp.float32)
+    return out
+
+
+def binary_conv2d_ref(a: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Channel-packed binary conv: a (H, W, C/32) uint32, k (kh, kw, C/32)
+    uint32, output int32 ±1 dot over (kh, kw, C)."""
+    H, W, Cw = a.shape
+    kh, kw, _ = k.shape
+    C = Cw * 32
+    out = jnp.zeros((H - kh + 1, W - kw + 1), jnp.int32)
+    for v in range(kh):
+        for h in range(kw):
+            x = a[v:H - kh + 1 + v, h:W - kw + 1 + h, :] ^ k[v, h, :]
+            mism = jnp.sum(jnp.bitwise_count(x).astype(jnp.int32), axis=-1)
+            out = out + (C - 2 * mism)
+    return out

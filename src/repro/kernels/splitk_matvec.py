@@ -1,0 +1,56 @@
+"""Split-K matrix-vector product — the TPU adaptation of MatPIM §II-A.
+
+MatPIM overcomes the tall-skinny asymmetry by splitting the contraction
+dimension into α blocks computed in parallel row-bands and tree-reducing the
+partial vectors. On TPU the same decomposition is the split-K GEMV: the K
+axis is split across a sequential grid axis that accumulates partial
+products into the output VMEM block (and, at mesh level, across the `model`
+axis with a psum — see distributed/sharding.py).
+
+This is exactly the decode-attention / decode-FFN shape (batch·1 × K @ K × N)
+where MXU utilization dies without split-K.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _splitk_kernel(a_ref, x_ref, o_ref, *, nsteps: int):
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)          # (bm, bk)
+    x = x_ref[...].astype(jnp.float32)          # (1, bk)
+    # contraction on the MXU: (bm, bk) @ (bk, 1)
+    o_ref[...] += jax.lax.dot_general(
+        a, x.T, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (bm, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def splitk_matvec(a: jnp.ndarray, x: jnp.ndarray, bm: int = 256,
+                  bk: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """y = A @ x. A (M, K) bf16/f32, x (K,). f32 accumulate, split-K grid."""
+    M, K = a.shape
+    bm, bk = min(bm, M), min(bk, K)
+    assert M % bm == 0 and K % bk == 0
+    nsteps = K // bk
+    y = pl.pallas_call(
+        functools.partial(_splitk_kernel, nsteps=nsteps),
+        grid=(M // bm, nsteps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((1, bk), lambda i, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        interpret=interpret,
+    )(a, x[None, :])
+    return y[:, 0]

@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_BASE_XLA", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the distribution config is coherent end-to-end:
+the jitted step (train_step for train shapes; forward for prefill;
+decode_step for decode) lowers, SPMD-partitions over the production mesh,
+and compiles; we record memory_analysis (fits?), cost_analysis (FLOPs /
+bytes for §Roofline) and the collective schedule (operand bytes by kind).
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-34b --shape train_4k [--multi-pod]
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results/]
+"""
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, TrainConfig, get_config, shapes_for
+from ..configs.base import ModelConfig, ShapeConfig
+from ..configs.registry import ASSIGNED
+from ..distributed.sharding import (resolve_spec, tree_shardings, use_mesh)
+from ..models.lm import N_PATCHES, build_model
+from ..models.spec import abstract_params, axes_tree
+from ..optim.optimizer import QTensor
+from ..train.train_step import make_train_step
+from . import analytic
+from . import hlo_analysis as H
+from .mesh import make_production_mesh
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict[str, Any]:
+    """ShapeDtypeStructs + shardings for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    batch_spec = lambda *dims: NamedSharding(
+        mesh, resolve_spec(("batch",) + (None,) * (len(dims) - 1), dims, mesh))
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "decode":
+        specs = {"tokens": sds((B, 1), i32), "pos": sds((B,), i32)}
+        shardings = {"tokens": batch_spec(B, 1), "pos": batch_spec(B)}
+        return specs, shardings
+
+    specs = {"tokens": sds((B, S), i32)}
+    shardings = {"tokens": batch_spec(B, S)}
+    if shape.kind == "train":
+        specs["targets"] = sds((B, S), i32)
+        shardings["targets"] = batch_spec(B, S)
+    if cfg.family == "encdec":
+        specs["frames"] = sds((B, cfg.enc_seq, cfg.d_model), dt)
+        shardings["frames"] = batch_spec(B, cfg.enc_seq, cfg.d_model)
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = sds((B, N_PATCHES, cfg.d_model), dt)
+        shardings["patch_embeds"] = batch_spec(B, N_PATCHES, cfg.d_model)
+    return specs, shardings
+
+
+def _zero1(spec: P, shape, mesh) -> P:
+    """ZeRO-1: additionally shard the first replicated dim over 'data'."""
+    dsize = mesh.shape.get("data", 1)
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (p, dim) in enumerate(zip(parts, shape)):
+        if p is None and dim % dsize == 0 and dim > 0:
+            parts[i] = "data"
+            return P(*parts)
+    return P(*parts)
+
+
+def opt_state_shardings(abstract_opt, param_shardings, mesh):
+    """Moments follow their parameter's sharding (int8 q exactly; the
+    per-last-axis scale drops the last dim); fp32 moments get ZeRO-1."""
+    def moments(mu, psh):
+        def one(leaf, sh):
+            if isinstance(leaf, QTensor):
+                parts = list(sh.spec)
+                scale_spec = P(*parts[:-1], None) if leaf.scale.ndim else P()
+                return QTensor(NamedSharding(mesh, sh.spec),
+                               NamedSharding(mesh, scale_spec))
+            return NamedSharding(mesh, _zero1(sh.spec, leaf.shape, mesh))
+        return {"m": one(mu["m"], psh), "v": one(mu["v"], psh)}
+
+    flat_p, td = jax.tree.flatten(param_shardings)
+    flat_mu = td.flatten_up_to(abstract_opt["mu"])
+    mus = jax.tree.unflatten(td, [moments(mu, sh)
+                                  for mu, sh in zip(flat_mu, flat_p)])
+    return {"mu": mus, "step": NamedSharding(mesh, P())}
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+
+def n_params(cfg: ModelConfig, active_only=False) -> float:
+    """Parameter count from the spec tree (active = top-k experts only)."""
+    from ..models.spec import is_spec
+    model = build_model(cfg)
+    total = 0.0
+    for path, s in jax.tree_util.tree_flatten_with_path(
+            model.specs(), is_leaf=is_spec)[0]:
+        n = math.prod(s.shape)
+        if active_only and "experts" in (s.axes or ()):
+            n = n * max(cfg.experts_per_tok, 1) / max(cfg.n_experts, 1)
+        total += n
+    return total
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             tc: Optional[TrainConfig] = None,
+             rules: Optional[dict] = None,
+             cfg_overrides: Optional[dict] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.devices.shape)
+    # 8 microbatches keeps the per-device live logits/activations honest for
+    # memory_analysis; the collective-byte trip correction (hlo_analysis)
+    # and the analytic FLOPs model make the cost accounting loop-safe.
+    tc = tc or TrainConfig(remat="full", opt_state_dtype="int8",
+                           microbatches=8)
+    t0 = time.time()
+
+    with use_mesh(mesh, rules):
+        model = build_model(cfg)
+        specs = model.specs()
+        aparams = abstract_params(specs, cfg.dtype)
+        p_shardings = tree_shardings(axes_tree(specs), aparams, mesh,
+                                     params=True)
+
+        if shape.kind == "train":
+            step_fn, opt = make_train_step(model, tc)
+            aopt = opt.abstract_init(aparams)
+            o_shardings = opt_state_shardings(aopt, p_shardings, mesh)
+            ins, in_sh = input_specs(cfg, shape, mesh)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shardings, o_shardings, in_sh),
+                out_shardings=(p_shardings, o_shardings, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(aparams, aopt, ins)
+        elif shape.kind == "prefill":
+            ins, in_sh = input_specs(cfg, shape, mesh)
+
+            def prefill(params, batch):
+                logits, cache = model.forward(params, batch)
+                return logits
+
+            jitted = jax.jit(prefill, in_shardings=(p_shardings, in_sh))
+            lowered = jitted.lower(aparams, ins)
+        else:  # decode
+            B, S = shape.global_batch, shape.seq_len
+            cache = jax.eval_shape(
+                lambda: model.init_cache(B, S, jnp.dtype(cfg.dtype)))
+            c_shardings = tree_shardings(model.cache_axes(), cache, mesh)
+            ins, in_sh = input_specs(cfg, shape, mesh)
+
+            def decode(params, cache, tokens, pos):
+                return model.decode_step(params, cache, tokens, pos)
+
+            jitted = jax.jit(
+                decode,
+                in_shardings=(p_shardings, c_shardings,
+                              in_sh["tokens"], in_sh["pos"]),
+                out_shardings=(None, c_shardings),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(aparams, cache, ins["tokens"], ins["pos"])
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll_raw, coll_corr, coll_wire = H.collective_bytes(hlo)
+
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    N_total = n_params(cfg)
+    N_active = n_params(cfg, active_only=True)
+    a_flops = analytic.cell_flops(cfg, shape, tc) / chips
+    a_bytes = analytic.cell_bytes(cfg, shape, tc, N_total) / chips
+    coll_total = float(sum(coll_corr.values()))
+    wire_total = float(sum(coll_wire.values()))
+    terms = H.roofline_terms(a_flops, a_bytes, coll_total, chips)
+    terms["collective_wire_s"] = wire_total / H.ICI_BW
+
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mf = H.model_flops(N_active, tokens, shape.kind)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        "ok": True,
+        "compile_s": round(time.time() - t0, 1),
+        "memory": {
+            "args_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(mem, "argument_size_in_bytes", 0))
+            + int(getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        "flops_per_device": a_flops,
+        "bytes_per_device": a_bytes,
+        "raw_cost_analysis": {"flops": raw_flops, "bytes": raw_bytes},
+        "collective_bytes": coll_corr,
+        "collective_bytes_uncorrected": coll_raw,
+        "collective_wire_bytes": coll_wire,
+        "collective_total": coll_total,
+        "collective_wire_total": wire_total,
+        "roofline": terms,
+        "dominant": H.dominant(terms),
+        "model_flops_total": mf,
+        "useful_flops_ratio": (mf / chips / a_flops) if a_flops else None,
+        "params_total": N_total,
+        "params_active": N_active,
+    }
+    return result
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results")
+    ap.add_argument("--cache-shard", default="seq",
+                    choices=["seq", "kv", "none"],
+                    help="decode KV-cache sharding strategy")
+    args = ap.parse_args()
+
+    rules = None
+    if args.cache_shard == "kv":
+        rules = {"cache_seq": None, "kv_heads": "model"}
+    elif args.cache_shard == "none":
+        rules = {"cache_seq": None}
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            for s in shapes_for(get_config(arch)):
+                cells.append((arch, s.name))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        tag = f"{arch}__{shape}__{'2x16x16' if args.multi_pod else '16x16'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip] {tag}")
+            continue
+        print(f"[cell] {tag} ...", flush=True)
+        try:
+            res = run_cell(arch, shape, args.multi_pod)
+        except Exception as e:  # noqa: BLE001 — record the failure
+            res = {"arch": arch, "shape": shape, "ok": False,
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        status = "OK" if res.get("ok") else "FAIL"
+        print(f"[{status}] {tag} "
+              f"({res.get('compile_s', '?')}s, dom={res.get('dominant')})",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

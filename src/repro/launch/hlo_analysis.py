@@ -1,0 +1,171 @@
+"""Roofline-term extraction from a compiled (post-SPMD) executable.
+
+compute   = HLO_FLOPs / (chips × peak_FLOP/s)
+memory    = HLO_bytes  / (chips × HBM_bw)
+collective= Σ collective operand bytes / (chips × link_bw)
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE (scan trip counts
+are not folded), so for scanned layer stacks both its FLOPs and our
+collective-byte parse must be corrected by loop trip counts. We parse the
+optimized HLO: computations, while-op body/condition wiring, and the loop
+bound constant inside each condition — every collective inside a while body
+is multiplied by the product of enclosing trip counts.
+
+FLOPs/bytes for the roofline table use the analytic model in
+``launch/analytic.py`` (exact matmul counts from the config); the raw
+cost_analysis numbers are reported alongside for reference.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+# TPU v5e-class constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|[subf]\d+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\],{}. ]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=([%\w.\-]+), body=([%\w.\-]+)")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?([%\w.\-]+)\s*\([^{]*->.*\{\s*$")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its lines (flat; computations are top-level)."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _HEADER_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(2)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def while_multipliers(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """computation -> product of enclosing while trip counts (ENTRY = 1)."""
+    # (caller, body, cond) triples
+    edges = []
+    for name, lines in comps.items():
+        for line in lines:
+            for m in _WHILE_RE.finditer(line):
+                edges.append((name, m.group(2), m.group(1)))
+
+    def trips_of(cond_name: str) -> int:
+        consts = [int(c) for line in comps.get(cond_name, [])
+                  for c in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    mult: Dict[str, int] = {name: 1 for name in comps}
+    # propagate: body multiplier = caller multiplier × trips (fixpoint; the
+    # call graph is a DAG of at most a few levels)
+    for _ in range(8):
+        changed = False
+        for caller, body, cond in edges:
+            m = mult.get(caller, 1) * trips_of(cond)
+            if mult.get(body, 1) != m:
+                mult[body] = m
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collective_bytes(hlo: str) -> Tuple[Dict[str, int], Dict[str, int],
+                                        Dict[str, int]]:
+    """Returns (operand bytes, trip-corrected operand bytes, trip-corrected
+    WIRE bytes) by collective kind.
+
+    Operand bytes per the assignment: all-reduce / all-to-all /
+    collective-permute operand == result; all-gather operand = result /
+    group_size; reduce-scatter operand = result × group_size.
+
+    Wire bytes = what actually crosses a device's links under ring/bidir
+    algorithms: AG/RS ≈ result·(g−1)/g, AR ≈ 2·result·(g−1)/g,
+    A2A ≈ result·(g−1)/g, permute = result.
+    """
+    comps = parse_computations(hlo)
+    mult = while_multipliers(comps)
+    raw: Dict[str, int] = {}
+    corrected: Dict[str, int] = {}
+    wire: Dict[str, int] = {}
+    for name, lines in comps.items():
+        m = mult.get(name, 1)
+        for line in lines:
+            cm = _COLL_RE.search(line)
+            if not cm:
+                continue
+            result_bytes = _shape_bytes(cm.group(1))
+            kind = cm.group(2)
+            g = _GROUPS_RE.search(line)
+            gsize = max(int(g.group(2)) if g else 1, 1)
+            frac = (gsize - 1) / gsize
+            if kind == "all-gather":
+                operand = result_bytes // gsize
+                w = int(result_bytes * frac)
+            elif kind == "reduce-scatter":
+                operand = result_bytes * gsize
+                w = int(result_bytes * gsize * frac)
+            elif kind == "all-reduce":
+                operand = result_bytes
+                w = int(2 * result_bytes * frac)
+            elif kind == "all-to-all":
+                operand = result_bytes
+                w = int(result_bytes * frac)
+            else:  # collective-permute
+                operand = result_bytes
+                w = result_bytes
+            raw[kind] = raw.get(kind, 0) + operand
+            corrected[kind] = corrected.get(kind, 0) + operand * m
+            wire[kind] = wire.get(kind, 0) + w * m
+    return raw, corrected, wire
+
+
+def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
+                   chips: int) -> Dict[str, float]:
+    """Terms in seconds. ``flops``/``bytes``/``coll_bytes`` are per-device."""
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_accessed / HBM_BW,
+        "collective_s": coll_bytes / ICI_BW,
+    }
+
+
+def dominant(terms: Dict[str, float]) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k])
+
+
+def model_flops(n_params_active: float, tokens: float, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D for training, 2·N·D for inference."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens

@@ -1,0 +1,25 @@
+"""Production meshes.
+
+Single pod: 256 chips as (data=16, model=16) — ICI all within the pod.
+Multi-pod: 2 pods = 512 chips as (pod=2, data=16, model=16) — the 'pod'
+axis is pure data parallelism so only the gradient all-reduce (optionally
+1-bit compressed, optim/grad_compress.py) crosses the inter-pod DCI.
+
+A function, not a module constant: importing this module never touches
+device state (jax locks the device count on first backend init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names (tests / CPU runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,5 @@
+"""Pure-JAX model zoo (param specs + apply fns); see lm.py for assembly."""
+from . import layers, mamba, spec
+from .lm import Model, build_model
+
+__all__ = ["Model", "build_model", "layers", "mamba", "spec"]

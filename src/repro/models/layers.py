@@ -1,0 +1,331 @@
+"""Model building blocks: norms, RoPE/M-RoPE, GQA attention (+KV cache),
+MLP (SwiGLU/GeLU), MoE (GShard capacity dispatch), binary (XNOR) FFN.
+
+All functions are pure: ``apply(params, cfg, x, ...) -> y``. Parameter
+*specs* (shape + logical sharding axes) are built by the ``*_specs``
+functions; see spec.py. Activation sharding constraints use logical names
+resolved in distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from .spec import Spec
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_specs(cfg: ModelConfig):
+    if cfg.norm == "rmsnorm":
+        return {"w": Spec((cfg.d_model,), ("embed",), "ones")}
+    if cfg.norm == "layernorm":
+        return {"w": Spec((cfg.d_model,), ("embed",), "ones"),
+                "b": Spec((cfg.d_model,), ("embed",), "zeros")}
+    return {}  # non-parametric (olmo)
+
+
+def apply_norm(p, cfg: ModelConfig, x):
+    xf = x.astype(F32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+        return (y * p["w"].astype(F32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+    if cfg.norm == "layernorm":
+        y = y * p["w"].astype(F32) + p["b"].astype(F32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(pos, hd: int, theta: float):
+    """pos (..., S) -> cos/sin (..., S, hd/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=F32) / hd))
+    ang = pos[..., None].astype(F32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, pos, theta: float, mrope_sections=None):
+    """x (B, S, H, hd); pos (B, S) or (3, B, S) for M-RoPE."""
+    hd = x.shape[-1]
+    if mrope_sections is None:
+        cos, sin = _rope_angles(pos, hd, theta)          # (B, S, hd/2)
+    else:
+        # M-RoPE: the hd/2 frequencies are partitioned into (t, h, w)
+        # sections, each rotated by its own position stream.
+        cos3, sin3 = _rope_angles(pos, hd, theta)         # (3, B, S, hd/2)
+        secs = jnp.cumsum(jnp.asarray((0,) + tuple(mrope_sections)))
+        idx = jnp.clip(jnp.searchsorted(secs[1:], jnp.arange(hd // 2),
+                                        side="right"), 0, 2)
+        cos = jnp.take_along_axis(
+            jnp.moveaxis(cos3, 0, -1), idx[None, None, :, None], axis=-1)[..., 0]
+        sin = jnp.take_along_axis(
+            jnp.moveaxis(sin3, 0, -1), idx[None, None, :, None], axis=-1)[..., 0]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    xf1, xf2 = x1.astype(F32), x2.astype(F32)
+    o1 = xf1 * cos - xf2 * sin
+    o2 = xf2 * cos + xf1 * sin
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional cross-attention, optional KV cache)
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig, cross: bool = False):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": Spec((D, H, hd), ("embed", "heads", "head_dim")),
+        "wk": Spec((D, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Spec((D, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Spec((H, hd, D), ("heads", "head_dim", "embed")),
+    }
+
+
+def _qkv(p, cfg: ModelConfig, xq, xkv):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q (B,Sq,H,hd); k/v (B,Skv,KV,hd); mask (B|1, Sq, Skv) or None."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Sq, KV, rep, hd)
+    logits = jnp.einsum("bqkrh,bskh->bkrqs", qg.astype(F32), k.astype(F32))
+    logits = logits / jnp.sqrt(hd).astype(F32)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", w, v.astype(F32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention(p, cfg: ModelConfig, x, pos, *, causal: bool,
+              positions3=None, kv_override=None):
+    """Full (train/prefill) attention. Returns y and (k, v) for caching."""
+    q, k, v = _qkv(p, cfg, x, x if kv_override is None else kv_override)
+    if cfg.rope != "none":
+        sections = cfg.mrope_sections if cfg.rope == "mrope" else None
+        rp = positions3 if sections is not None else pos
+        q = apply_rope(q, rp, cfg.rope_theta, sections)
+        k = apply_rope(k, rp, cfg.rope_theta, sections)
+    mask = None
+    if causal:
+        S = x.shape[1]
+        mask = (jnp.arange(S)[:, None] >= jnp.arange(S)[None, :])[None]  # (1,S,S)
+    o = _sdpa(q, k, v, mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return constrain(y, ("batch", None, None)), (k, v)
+
+
+def cross_attention(p, cfg: ModelConfig, x, enc_kv):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k, v = enc_kv
+    o = _sdpa(q, k, v, None, cfg)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def attention_decode(p, cfg: ModelConfig, x, cache_k, cache_v, pos):
+    """One-token decode against a (B, S_max, KV, hd) cache.
+
+    ``pos`` (B,) is the write index. The cache's sequence axis may be
+    sharded ('cache_seq' → model): the softmax/contraction reductions over
+    it become collectives — MatPIM's split-K block reduction at mesh level.
+    """
+    B, Smax = cache_k.shape[0], cache_k.shape[1]
+    q, k, v = _qkv(p, cfg, x, x)
+    if cfg.rope != "none":
+        sections = cfg.mrope_sections if cfg.rope == "mrope" else None
+        if sections is not None:
+            rp = jnp.broadcast_to(pos[None, :, None], (3, B, 1))
+        else:
+            rp = pos[:, None]
+        q = apply_rope(q, rp, cfg.rope_theta, sections)
+        k = apply_rope(k, rp, cfg.rope_theta, sections)
+    # scatter (overwrite) the new k/v at position pos — a set, not an add,
+    # so recycled batch slots with stale cache rows stay correct
+    onehot = jax.nn.one_hot(pos, Smax, dtype=cache_k.dtype)  # (B, Smax)
+    keep = (1 - onehot)[:, :, None, None]
+    cache_k = cache_k * keep + onehot[:, :, None, None] * k
+    cache_v = cache_v * keep + onehot[:, :, None, None] * v
+    cache_k = constrain(cache_k, ("batch", "cache_seq", "kv_heads", None))
+    cache_v = constrain(cache_v, ("batch", "cache_seq", "kv_heads", None))
+    valid = (jnp.arange(Smax)[None, :] <= pos[:, None])[:, None, :]  # (B,1,Smax)
+    o = _sdpa(q, cache_k, cache_v, valid, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return constrain(y, ("batch", None, None)), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU) + binary (XNOR-popcount) variant
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None):
+    D, Ff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {"wi": Spec((D, 2, Ff), ("embed", None, "mlp")),
+                "wo": Spec((Ff, D), ("mlp", "embed"))}
+    return {"wi": Spec((D, Ff), ("embed", "mlp")),
+            "wo": Spec((Ff, D), ("mlp", "embed"))}
+
+
+@jax.custom_vjp
+def _sign_ste(x):
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _sign_fwd(x):
+    return _sign_ste(x), x
+
+
+def _sign_bwd(x, g):
+    # straight-through: pass gradient where |x| <= 1 (XNOR-Net clipping)
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+_sign_ste.defvjp(_sign_fwd, _sign_bwd)
+
+
+def apply_mlp(p, cfg: ModelConfig, x):
+    if cfg.binary_ffn:
+        # MatPIM §II-B as a layer: ±1 activations × ±1 weights. Training
+        # uses the straight-through estimator; inference uses the packed
+        # XNOR-popcount Pallas kernel (serve path / kernels.ops).
+        xb = _sign_ste(x.astype(F32))
+        if cfg.act == "swiglu":
+            wb = _sign_ste(p["wi"].astype(F32))
+            h = jnp.einsum("bsd,dcf->bcsf", xb, wb)
+            h = jax.nn.silu(h[:, 0]) * h[:, 1]
+        else:
+            h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", xb, _sign_ste(p["wi"].astype(F32))))
+        h = constrain(h.astype(x.dtype), ("batch", None, "mlp"))
+        y = jnp.einsum("bsf,fd->bsd", _sign_ste(h.astype(F32)),
+                       _sign_ste(p["wo"].astype(F32))).astype(x.dtype)
+        return constrain(y, ("batch", None, None))
+    if cfg.act == "swiglu":
+        h = jnp.einsum("bsd,dcf->bcsf", x, p["wi"])
+        h = (jax.nn.silu(h[:, 0].astype(F32)) * h[:, 1].astype(F32)).astype(x.dtype)
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+        h = jax.nn.gelu(h.astype(F32)).astype(x.dtype)
+    h = constrain(h, ("batch", None, "mlp"))
+    y = jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    return constrain(y, ("batch", None, None))
+
+
+# ---------------------------------------------------------------------------
+# MoE: router + GShard-style capacity dispatch (compile-friendly, EP-ready)
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg: ModelConfig):
+    D, Ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    wi_shape = (E, D, 2, Ff) if cfg.act == "swiglu" else (E, D, Ff)
+    wi_axes = ("experts", "embed", None, "mlp") if cfg.act == "swiglu" \
+        else ("experts", "embed", "mlp")
+    return {
+        "router": Spec((D, E), ("embed", "experts"), dtype="float32"),
+        "wi": Spec(wi_shape, wi_axes),
+        "wo": Spec((E, Ff, D), ("experts", "mlp", "embed")),
+    }
+
+
+MOE_GROUP = 4096  # tokens routed per group (keeps dispatch O(T), GShard-style)
+
+
+def apply_moe(p, cfg: ModelConfig, x):
+    """Top-k routing with per-expert capacity *per token group* (GShard);
+    dropped tokens pass through (residual). The dispatch tensor is
+    (G, Tg, E, C) with C = k·Tg·cf/E — linear in total tokens. Expert dim
+    shards over 'model' (expert parallelism): the dispatch einsums lower to
+    all-to-alls under that sharding; the group dim shards over 'batch'."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_tok
+    T = B * S
+    Tg = min(MOE_GROUP, T)
+    G = T // Tg
+    xt = x.reshape(G, Tg, D)
+    xt = constrain(xt, ("batch", None, None))
+    logits = jnp.einsum("gtd,de->gte", xt.astype(F32), p["router"].astype(F32))
+    gates = jax.nn.softmax(logits, -1)
+    topg, topi = jax.lax.top_k(gates, k)                        # (G, Tg, k)
+    topg = topg / jnp.clip(topg.sum(-1, keepdims=True), 1e-9)   # renormalize
+
+    C = max(int(k * Tg * cfg.capacity_factor / E), 1)
+    # rank of each (token, slot) within its expert's queue, per group
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.int32)           # (G, Tg, k, E)
+    flat = onehot.reshape(G, Tg * k, E)
+    ranks = (jnp.cumsum(flat, axis=1) - flat).reshape(G, Tg, k, E)
+    rank = (ranks * onehot).sum(-1)                             # (G, Tg, k)
+    keep = rank < C
+    disp = (onehot * keep[..., None]).astype(jnp.bfloat16)
+    pos_oh = jax.nn.one_hot(jnp.clip(rank, 0, C - 1), C, dtype=jnp.bfloat16)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", disp, pos_oh)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", disp, pos_oh,
+                         topg.astype(jnp.bfloat16))
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xt)             # (G, E, C, D)
+    xe = constrain(xe, ("batch", "experts", None, None))
+    if cfg.act == "swiglu":
+        h = jnp.einsum("gecd,edzf->gezcf", xe, p["wi"])
+        h = (jax.nn.silu(h[:, :, 0].astype(F32))
+             * h[:, :, 1].astype(F32)).astype(x.dtype)
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe,
+                                   p["wi"]).astype(F32)).astype(x.dtype)
+    h = constrain(h, ("batch", "experts", None, "mlp"))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)
+    return constrain(y.reshape(B, S, D), ("batch", None, None))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig):
+    V = cfg.vocab_padded
+    s = {"tok": Spec((V, cfg.d_model), ("vocab", "embed"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = Spec((cfg.d_model, V), ("embed", "vocab"))
+    return s
+
+
+def embed(p, cfg: ModelConfig, ids):
+    y = jnp.take(p["tok"], ids, axis=0)
+    return constrain(y, ("batch", None, None))
+
+
+def unembed(p, cfg: ModelConfig, x):
+    w = p.get("unembed")
+    if w is None:
+        w = p["tok"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w).astype(F32)
+    return constrain(logits, ("batch", None, "vocab"))

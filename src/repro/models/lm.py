@@ -1,0 +1,360 @@
+"""Model assembly for every assigned architecture family.
+
+One generic ``Model`` covers:
+  dense / moe / vlm — decoder-only stacks (uniform or periodic layer groups)
+  ssm               — mamba2 (attention-free)
+  hybrid            — jamba (mamba + attn 1:7, MoE every 2nd layer)
+  encdec            — whisper (bidirectional encoder + causal decoder w/ cross)
+
+Layer stacks are ``lax.scan`` over *groups*: a group is the smallest periodic
+pattern of sublayers (period = lcm(attn_every, moe_every)); parameters are
+stacked over groups so the HLO is O(period), not O(n_layers).
+
+Inputs (``input_specs`` in launch/dryrun.py builds ShapeDtypeStructs):
+  tokens (B,S) int32; targets (B,S) int32 (train)
+  frames (B,enc_seq,D)      — whisper stub frontend (precomputed embeddings)
+  patch_embeds (B,n_patch,D)— qwen2-vl stub frontend
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from . import layers as L
+from . import mamba as M
+from .spec import Spec, stack_specs
+
+F32 = jnp.float32
+N_PATCHES = 256  # vlm stub: image patches prepended to the text sequence
+
+
+def _lcm(a, b):
+    return a * b // math.gcd(a, b)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, remat: str = "none"):
+        self.cfg = cfg
+        self.remat = remat  # none | full | dots (activation checkpointing)
+        if cfg.family == "ssm":
+            self.period = 1
+            self.kinds = [("mamba", "none")]
+        elif cfg.family == "hybrid":
+            p = _lcm(cfg.attn_every or 1, cfg.moe_every or 1)
+            self.period = p
+            self.kinds = [("attn" if cfg.is_attn_layer(i) else "mamba",
+                           "moe" if cfg.is_moe_layer(i) else "mlp")
+                          for i in range(p)]
+        else:
+            p = cfg.moe_every if cfg.n_experts else 1
+            self.period = p
+            self.kinds = [("attn", "moe" if cfg.is_moe_layer(i) else "mlp")
+                          for i in range(p)]
+        assert cfg.n_layers % self.period == 0
+        self.n_groups = cfg.n_layers // self.period
+
+    # -- specs -----------------------------------------------------------------
+
+    def _sublayer_specs(self, mixer: str, ffn: str) -> Dict[str, Any]:
+        cfg = self.cfg
+        s: Dict[str, Any] = {"norm1": L.norm_specs(cfg)}
+        if mixer == "attn":
+            s["attn"] = L.attn_specs(cfg)
+        else:
+            s["mamba"] = M.mamba_specs(cfg)
+        if ffn != "none":
+            s["norm2"] = L.norm_specs(cfg)
+            if ffn == "moe":
+                s["moe"] = L.moe_specs(cfg)
+                if cfg.dense_ff:
+                    s["dense_mlp"] = L.mlp_specs(cfg, cfg.dense_ff)
+            else:
+                s["mlp"] = L.mlp_specs(cfg)
+            if cfg.dense_ff and ffn == "mlp":
+                pass
+        return s
+
+    def specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        group = {f"sub{i}": self._sublayer_specs(mx, ff)
+                 for i, (mx, ff) in enumerate(self.kinds)}
+        s: Dict[str, Any] = {
+            "embed": L.embed_specs(cfg),
+            "final_norm": L.norm_specs(cfg),
+            "layers": stack_specs(group, self.n_groups, "layers"),
+        }
+        if cfg.family == "encdec":
+            enc_group = {"sub0": {"norm1": L.norm_specs(cfg),
+                                  "attn": L.attn_specs(cfg),
+                                  "norm2": L.norm_specs(cfg),
+                                  "mlp": L.mlp_specs(cfg)}}
+            s["encoder"] = stack_specs(enc_group, cfg.enc_layers, "layers")
+            s["enc_final_norm"] = L.norm_specs(cfg)
+            # decoder cross-attention, one per decoder layer group
+            s["cross"] = stack_specs(
+                {"norm": L.norm_specs(cfg), "attn": L.attn_specs(cfg, cross=True)},
+                self.n_groups, "layers")
+        if cfg.family == "vlm":
+            s["patch_proj"] = {"w": Spec((cfg.d_model, cfg.d_model),
+                                         ("embed", None))}
+        return s
+
+    # -- position helpers --------------------------------------------------------
+
+    def _positions(self, B: int, S: int, offset=0):
+        pos = jnp.arange(S)[None, :] + offset
+        return jnp.broadcast_to(pos, (B, S))
+
+    def _positions3(self, B: int, S: int):
+        """VLM M-RoPE stub: patches get an (h, w) grid at t=0; text tokens
+        get t=h=w=absolute-position (so decode_step's (pos,pos,pos) rotary
+        stream is consistent with prefill)."""
+        side = int(math.sqrt(N_PATCHES))
+        n_p = min(N_PATCHES, S)
+        text = jnp.arange(n_p, S, dtype=jnp.int32)
+        t = jnp.concatenate([jnp.zeros(n_p, jnp.int32), text])
+        hh = jnp.concatenate([(jnp.arange(n_p) // side).astype(jnp.int32), text])
+        ww = jnp.concatenate([(jnp.arange(n_p) % side).astype(jnp.int32), text])
+        p3 = jnp.stack([t, hh, ww]).astype(jnp.int32)          # (3, S)
+        return jnp.broadcast_to(p3[:, None, :], (3, B, S))
+
+    # -- sublayer application -------------------------------------------------------
+
+    def _apply_sublayer(self, p, kind, x, pos, positions3, *, decode=False,
+                        cache=None, cross_kv=None):
+        cfg = self.cfg
+        mixer, ffn = kind
+        new_cache = {}
+        h = L.apply_norm(p["norm1"], cfg, x)
+        if mixer == "attn":
+            if decode:
+                y, ck, cv = L.attention_decode(p["attn"], cfg, h,
+                                               cache["k"], cache["v"], pos)
+                new_cache = {"k": ck, "v": cv}
+            else:
+                y, (k, v) = L.attention(p["attn"], cfg, h, pos, causal=True,
+                                        positions3=positions3)
+                new_cache = {"k": k, "v": v}
+        else:
+            if decode:
+                y, conv, ssm = M.apply_mamba_step(p["mamba"], cfg, h,
+                                                  cache["conv"], cache["ssm"])
+                new_cache = {"conv": conv, "ssm": ssm}
+            else:
+                y, st = M.apply_mamba(p["mamba"], cfg, h)
+                new_cache = st
+        x = x + y
+        if cross_kv is not None:
+            h = L.apply_norm(p["cross_norm"], cfg, x)
+            x = x + L.cross_attention(p["cross_attn"], cfg, h, cross_kv)
+        if ffn != "none":
+            h = L.apply_norm(p["norm2"], cfg, x)
+            if ffn == "moe":
+                y = L.apply_moe(p["moe"], cfg, h)
+                if cfg.dense_ff:
+                    y = y + L.apply_mlp(p["dense_mlp"], cfg, h)
+            else:
+                y = L.apply_mlp(p["mlp"], cfg, h)
+            x = x + y
+        return x, new_cache
+
+    # -- encoder (whisper) -----------------------------------------------------------
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        B, S, D = frames.shape
+        pos = self._positions(B, S)
+        # sinusoidal positions on top of the (stub) conv frontend output
+        x = frames + _sinusoid(S, D, frames.dtype)[None]
+
+        def body(h, lp):
+            p = lp["sub0"]
+            y = L.apply_norm(p["norm1"], cfg, h)
+            y, _ = L.attention(p["attn"], cfg, y, pos, causal=False)
+            h = h + y
+            y = L.apply_norm(p["norm2"], cfg, h)
+            h = h + L.apply_mlp(p["mlp"], cfg, y)
+            return h, None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, self.remat), x,
+                            params["encoder"])
+        return L.apply_norm(params["enc_final_norm"], cfg, x)
+
+    def encoder_kv(self, params, enc_out):
+        """Per-decoder-layer-group cross K/V from the encoder output."""
+        cfg = self.cfg
+
+        def one(cp):
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, cp["attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, cp["attn"]["wv"])
+            return k, v
+
+        return jax.vmap(one)(params["cross"])          # (L, B, S, KV, hd)
+
+    # -- forward (train / prefill) -----------------------------------------------------
+
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, Any]:
+        """Returns (logits, cache). Cache leaves are stacked over groups."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = L.embed(params["embed"], cfg, tokens)
+        positions3 = None
+        if cfg.family == "vlm":
+            patches = jnp.einsum("bpd,de->bpe", batch["patch_embeds"],
+                                 params["patch_proj"]["w"]).astype(x.dtype)
+            n_p = patches.shape[1]
+            x = jnp.concatenate([patches, x[:, : S - n_p]], axis=1)
+            positions3 = self._positions3(B, S)
+        pos = self._positions(B, S)
+
+        cross_kv = None
+        if cfg.family == "encdec":
+            enc_out = self.encode(params, batch["frames"])
+            cross_kv = self.encoder_kv(params, enc_out)
+            x = x + _sinusoid(S, cfg.d_model, x.dtype)[None]
+
+        def body(h, scanned):
+            lp = scanned["layers"]
+            ckv = scanned.get("cross_kv")
+            new_caches = {}
+            for i, kind in enumerate(self.kinds):
+                p = dict(lp[f"sub{i}"])
+                if ckv is not None and i == 0:
+                    p["cross_norm"] = scanned["cross"]["norm"]
+                    p["cross_attn"] = scanned["cross"]["attn"]
+                h, c = self._apply_sublayer(
+                    p, kind, h, pos, positions3,
+                    cross_kv=ckv if (ckv is not None and i == 0) else None)
+                new_caches[f"sub{i}"] = c
+            return h, new_caches
+
+        scanned = {"layers": params["layers"]}
+        if cross_kv is not None:
+            scanned["cross_kv"] = cross_kv
+            scanned["cross"] = params["cross"]
+        body = _maybe_remat(body, self.remat)
+        x, caches = jax.lax.scan(body, x, scanned)
+        x = L.apply_norm(params["final_norm"], cfg, x)
+        logits = L.unembed(params["embed"], cfg, x)
+        return logits, caches
+
+    # -- decode ---------------------------------------------------------------------
+
+    def init_cache(self, B: int, S_max: int, dtype=jnp.bfloat16,
+                   enc_seq: Optional[int] = None):
+        """Abstract/concrete cache factory (zeros); stacked over groups."""
+        cfg = self.cfg
+        per_group: Dict[str, Any] = {}
+        for i, (mixer, _) in enumerate(self.kinds):
+            if mixer == "attn":
+                per_group[f"sub{i}"] = {
+                    "k": jnp.zeros((self.n_groups, B, S_max, cfg.n_kv_heads,
+                                    cfg.hd), dtype),
+                    "v": jnp.zeros((self.n_groups, B, S_max, cfg.n_kv_heads,
+                                    cfg.hd), dtype),
+                }
+            else:
+                ch = cfg.di + 2 * cfg.ssm_state
+                per_group[f"sub{i}"] = {
+                    "conv": jnp.zeros((self.n_groups, B, cfg.conv_dim - 1, ch),
+                                      dtype),
+                    "ssm": jnp.zeros((self.n_groups, B, cfg.ssm_heads,
+                                      cfg.ssm_headdim, cfg.ssm_state), F32),
+                }
+        cache: Dict[str, Any] = {"layers": per_group}
+        if cfg.family == "encdec":
+            es = enc_seq or cfg.enc_seq
+            cache["cross_kv"] = (
+                jnp.zeros((self.n_groups, B, es, cfg.n_kv_heads, cfg.hd), dtype),
+                jnp.zeros((self.n_groups, B, es, cfg.n_kv_heads, cfg.hd), dtype),
+            )
+        return cache
+
+    def cache_axes(self):
+        """Logical sharding axes matching init_cache (for the dry-run)."""
+        cfg = self.cfg
+        per_group = {}
+        for i, (mixer, _) in enumerate(self.kinds):
+            if mixer == "attn":
+                ax = ("layers", "batch", "cache_seq", "kv_heads", None)
+                per_group[f"sub{i}"] = {"k": ax, "v": ax}
+            else:
+                per_group[f"sub{i}"] = {
+                    "conv": ("layers", "batch", None, "d_inner"),
+                    "ssm": ("layers", "batch", None, None, None),
+                }
+        cache = {"layers": per_group}
+        if cfg.family == "encdec":
+            ax = ("layers", "batch", None, "kv_heads", None)
+            cache["cross_kv"] = (ax, ax)
+        return cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens (B,1); pos (B,) write index. Returns (logits, new cache)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = L.embed(params["embed"], cfg, tokens)
+        if cfg.family == "encdec":
+            x = x + _sinusoid_at(pos, cfg.d_model, x.dtype)[:, None, :]
+        positions3 = None  # vlm decode: text-only continuation (stub)
+
+        def body(h, scanned):
+            lp, lc = scanned["layers"], scanned["cache"]
+            new_caches = {}
+            for i, kind in enumerate(self.kinds):
+                p = dict(lp[f"sub{i}"])
+                ckv = scanned.get("cross_kv") if i == 0 else None
+                if ckv is not None:
+                    p["cross_norm"] = scanned["cross"]["norm"]
+                    p["cross_attn"] = scanned["cross"]["attn"]
+                h, c = self._apply_sublayer(p, kind, h, pos, positions3,
+                                            decode=True, cache=lc[f"sub{i}"],
+                                            cross_kv=ckv)
+                new_caches[f"sub{i}"] = c
+            return h, new_caches
+
+        scanned = {"layers": params["layers"], "cache": cache["layers"]}
+        if cfg.family == "encdec":
+            scanned["cross_kv"] = cache["cross_kv"]
+            scanned["cross"] = params["cross"]
+        x, new_layer_cache = jax.lax.scan(body, x, scanned)
+        x = L.apply_norm(params["final_norm"], cfg, x)
+        logits = L.unembed(params["embed"], cfg, x)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layer_cache
+        return logits, new_cache
+
+
+def _sinusoid(S: int, D: int, dtype):
+    pos = jnp.arange(S, dtype=F32)[:, None]
+    dim = jnp.arange(0, D, 2, dtype=F32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / D)
+    out = jnp.zeros((S, D), F32).at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out.astype(dtype)
+
+
+def _sinusoid_at(pos, D: int, dtype):
+    dim = jnp.arange(0, D, 2, dtype=F32)[None, :]
+    ang = pos.astype(F32)[:, None] / jnp.power(10000.0, dim / D)
+    out = jnp.zeros((pos.shape[0], D), F32).at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out.astype(dtype)
+
+
+def _maybe_remat(body, remat: str):
+    if remat == "none":
+        return body
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if remat == "dots" else None)
+    return jax.checkpoint(body, policy=policy)
+
+
+def build_model(cfg: ModelConfig, remat: str = "none") -> Model:
+    return Model(cfg, remat)

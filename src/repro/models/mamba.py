@@ -1,0 +1,173 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked train/prefill scan +
+O(1)-state decode step. Pure JAX, follows the minimal-mamba2 formulation.
+
+    h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t
+    y_t = C_t · h_t + D x_t
+
+Chunked algorithm: intra-chunk quadratic attention-like term + inter-chunk
+state recurrence (lax.scan over chunks). MatPIM applicability note: the
+state scan is not a matvec-with-reduction shape, so the paper's technique
+does not apply here (DESIGN.md §5); in/out projections still shard (TP).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+from .spec import Spec
+
+F32 = jnp.float32
+
+
+def mamba_specs(cfg: ModelConfig):
+    D, DI = cfg.d_model, cfg.di
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    G = 1  # single B/C group
+    conv_ch = DI + 2 * G * N
+    return {
+        # in_proj produces [z (DI), x (DI), B (G*N), C (G*N), dt (H)]
+        "in_proj": Spec((D, 2 * DI + 2 * G * N + H), ("embed", "d_inner")),
+        "conv_w": Spec((cfg.conv_dim, conv_ch), (None, "d_inner")),
+        "conv_b": Spec((conv_ch,), ("d_inner",), "zeros"),
+        "A_log": Spec((H,), (None,), "zeros", dtype="float32"),
+        "D": Spec((H,), (None,), "ones", dtype="float32"),
+        "dt_bias": Spec((H,), (None,), "zeros", dtype="float32"),
+        "out_proj": Spec((DI, D), ("d_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    DI, G, N, H = cfg.di, 1, cfg.ssm_state, cfg.ssm_heads
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [DI, 2 * DI, 2 * DI + G * N, 2 * DI + 2 * G * N], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via static shifts. x (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i, :]
+        out = out + shifted * w[K - 1 - i]
+    return jax.nn.silu((out + b).astype(F32)).astype(x.dtype)
+
+
+def _segsum(dA):
+    """dA (..., L) -> (..., L, L) lower-tri cumulative sums for the decay."""
+    L = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int = 256,
+                init_state: Optional[jnp.ndarray] = None):
+    """x (b,s,h,p); dt (b,s,h) >0; A (h,) <0; B,C (b,s,n); D (h,).
+
+    Returns y (b,s,h,p) and the final state (b,h,p,n).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    c = s // chunk
+    xf = x.astype(F32).reshape(b, c, chunk, h, p)
+    dtf = dt.astype(F32).reshape(b, c, chunk, h)
+    Bf = B.astype(F32).reshape(b, c, chunk, n)
+    Cf = C.astype(F32).reshape(b, c, chunk, n)
+    dA = dtf * A  # (b,c,l,h)
+
+    # intra-chunk (quadratic within chunk)
+    Ldec = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))          # (b,c,h,l,l)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)             # (b,c,l,l)
+    att = scores[:, :, None] * Ldec                            # (b,c,h,l,l)
+    y_intra = jnp.einsum("bchij,bcjh,bcjhp->bcihp", att, dtf, xf)
+
+    # chunk-final states
+    dA_cum = jnp.cumsum(dA, axis=2)                            # (b,c,l,h)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)      # (b,c,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                        Bf, dtf * decay_to_end, xf)            # (b,c,h,p,n)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                 # (b,c,h)
+
+    # inter-chunk recurrence
+    def step(carry, inp):
+        st, dec = inp                                          # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                      # emit prev state
+
+    init = init_state if init_state is not None else jnp.zeros(
+        (b, h, p, n), F32)
+    final, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)              # (b,c,h,p,n)
+
+    # inter-chunk contribution
+    in_decay = jnp.exp(dA_cum)                                 # (b,c,l,h)
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", Cf, in_decay, prev_states)
+
+    y = (y_intra + y_inter + D[None, None, :, None] * xf.reshape(b, c, chunk, h, p))
+    return y.reshape(b, s, h, p).astype(x.dtype), final
+
+
+def ssd_step(x, dt, A, B, C, D, state):
+    """Single-token recurrence. x (b,h,p); dt (b,h); B,C (b,n); state (b,h,p,n)."""
+    xf, dtf = x.astype(F32), dt.astype(F32)
+    dA = jnp.exp(dtf * A)                                      # (b,h)
+    new_state = state * dA[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dtf, B.astype(F32), xf)
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(F32), new_state) + D[None, :, None] * xf
+    return y.astype(x.dtype), new_state
+
+
+def apply_mamba(p, cfg: ModelConfig, x, *, chunk: int = 256):
+    """Full-sequence mamba2 block. x (B,S,D) -> (B,S,D), final ssm state."""
+    B_, S, D = x.shape
+    DI, H, Pd, N = cfg.di, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    zxbcdt = constrain(zxbcdt, ("batch", None, "d_inner"))
+    z, xs, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+    xbc_raw = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, Bc, Cc = jnp.split(xbc, [DI, DI + N], axis=-1)
+    dtv = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])       # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                   # (H,)
+    y, state = ssd_chunked(xs.reshape(B_, S, H, Pd), dtv, A, Bc, Cc, p["D"],
+                           chunk=chunk)
+    y = y.reshape(B_, S, DI) * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    # conv tail (last K-1 pre-conv inputs) so a prefill can seed decoding
+    K = cfg.conv_dim
+    conv_tail = xbc_raw[:, -(K - 1):, :]
+    return constrain(out, ("batch", None, None)), {"ssm": state,
+                                                   "conv": conv_tail}
+
+
+def apply_mamba_step(p, cfg: ModelConfig, x, conv_state, ssm_state):
+    """One-token decode. x (B,1,D); conv_state (B,K-1,conv_ch);
+    ssm_state (B,H,P,N). Returns y (B,1,D) and updated states."""
+    B_, _, D = x.shape
+    DI, H, Pd, N = cfg.di, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    K = cfg.conv_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]  # (B, E)
+    z, xs, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)               # (B, conv_ch)
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,K,ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(F32),
+                          p["conv_w"].astype(F32)) + p["conv_b"].astype(F32)
+    xbc = jax.nn.silu(conv_out).astype(x.dtype)
+    xs, Bc, Cc = jnp.split(xbc, [DI, DI + N], axis=-1)
+    dtv = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])       # (B,H)
+    A = -jnp.exp(p["A_log"])
+    y, new_ssm = ssd_step(xs.reshape(B_, H, Pd), dtv, A, Bc, Cc, p["D"],
+                          ssm_state)
+    y = y.reshape(B_, DI) * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None, :]
+    return out, window[:, 1:, :], new_ssm

@@ -1,0 +1,66 @@
+"""Parameter specs: shape + logical axes + initializer, built once per model.
+
+A model builder returns a pytree of ``Spec``; from it we derive
+  * concrete params        (``init_params``)
+  * abstract params        (``abstract_params`` — ShapeDtypeStruct, no alloc)
+  * logical-axis tree      (``axes_tree`` — consumed by distributed/sharding)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis per dim
+    init: str = "normal"              # normal | zeros | ones
+    scale: Optional[float] = None     # default: 1/sqrt(fan_in)
+    dtype: Optional[str] = None       # None -> model dtype (cfg.dtype)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_params(specs, key: jax.Array, default_dtype: str = "bfloat16"):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dtype = jnp.dtype(spec.dtype or default_dtype)
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dtype))
+        else:
+            fan_in = spec.shape[0] if spec.shape else 1
+            scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs, default_dtype: str = "bfloat16"):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or default_dtype)),
+        specs, is_leaf=is_spec)
+
+
+def axes_tree(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree, n: int, axis_name: Optional[str] = "layers"):
+    """Prepend a stacking dimension (for lax.scan over layers)."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale,
+                       s.dtype),
+        spec_tree, is_leaf=is_spec)

@@ -1,0 +1,3 @@
+from . import grad_compress
+from .optimizer import AdamW, make_optimizer
+__all__ = ["AdamW", "make_optimizer", "grad_compress"]

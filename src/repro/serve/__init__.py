@@ -1,0 +1,2 @@
+from .engine import Engine, Request
+__all__ = ["Engine", "Request"]

@@ -1,0 +1,141 @@
+"""Serving engine: continuous-batching prefill + decode with KV cache.
+
+The decode path is where MatPIM's contribution lives at mesh level: every
+per-token matmul is a tall-skinny matvec, and the KV-cache sequence axis is
+sharded over 'model' (split-K with tree reduction — the paper's α-block
+decomposition; see distributed/sharding.py).
+
+``Engine`` handles: prefill → cache handoff (padding to the cache length),
+slot-based continuous batching, EOS retirement, and greedy/temperature
+sampling. Pure-JAX steps; the batching loop is host-side (as in real
+serving systems).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.lm import Model
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (S_prompt,) int32
+    max_new: int = 32
+    out: Optional[List[int]] = None
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model: Model, params, max_batch: int = 8,
+                 max_seq: int = 256, temperature: float = 0.0,
+                 eos_id: int = -1):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.B = max_batch
+        self.S = max_seq
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.cache = model.init_cache(self.B, self.S, jnp.dtype(self.cfg.dtype))
+        self.pos = np.zeros(self.B, np.int32)        # next write index / slot
+        self.slots: List[Optional[Request]] = [None] * self.B
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(self._prefill_impl)
+
+    # -- prefill --------------------------------------------------------------
+
+    def _prefill_impl(self, params, tokens):
+        """Single-request prefill; returns (last_logits, per-layer K/V)."""
+        logits, caches = self.model.forward(params, {"tokens": tokens})
+        return logits[:, -1], caches
+
+    def admit(self, req: Request) -> bool:
+        """Prefill a request into a free slot; False if engine is full."""
+        try:
+            slot = self.slots.index(None)
+        except ValueError:
+            return False
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        last_logits, caches = self._prefill(self.params, toks)
+        S_p = req.prompt.shape[0]
+        # handoff: scatter the prefill K/V into the slot's cache rows
+        layers = self.cache["layers"]
+        for name, c in caches.items():
+            if "k" in c:  # attention
+                self.cache["layers"][name]["k"] = \
+                    self.cache["layers"][name]["k"].at[:, slot, :S_p].set(
+                        c["k"][:, 0].astype(self.cache["layers"][name]["k"].dtype))
+                self.cache["layers"][name]["v"] = \
+                    self.cache["layers"][name]["v"].at[:, slot, :S_p].set(
+                        c["v"][:, 0].astype(self.cache["layers"][name]["v"].dtype))
+            else:          # mamba states
+                self.cache["layers"][name]["conv"] = \
+                    self.cache["layers"][name]["conv"].at[:, slot].set(
+                        c["conv"][:, 0].astype(
+                            self.cache["layers"][name]["conv"].dtype))
+                self.cache["layers"][name]["ssm"] = \
+                    self.cache["layers"][name]["ssm"].at[:, slot].set(
+                        c["ssm"][:, 0])
+        self.pos[slot] = S_p
+        req.out = []
+        first = self._sample(np.asarray(last_logits)[0])
+        req.out.append(int(first))
+        self.slots[slot] = req
+        return True
+
+    # -- decode ----------------------------------------------------------------
+
+    def _sample(self, logits: np.ndarray) -> int:
+        logits = logits[: self.cfg.vocab]
+        if self.temperature <= 0:
+            return int(np.argmax(logits))
+        p = np.exp((logits - logits.max()) / self.temperature)
+        p = p / p.sum()
+        return int(np.random.choice(len(p), p=p))
+
+    def step(self) -> List[Tuple[int, int]]:
+        """One decode step for every live slot; returns [(uid, token)]."""
+        live = [i for i, r in enumerate(self.slots) if r is not None]
+        if not live:
+            return []
+        tokens = np.zeros((self.B, 1), np.int32)
+        for i in live:
+            tokens[i, 0] = self.slots[i].out[-1]
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.pos, jnp.int32))
+        out = []
+        logits_np = np.asarray(logits[:, 0])
+        for i in live:
+            req = self.slots[i]
+            tok = self._sample(logits_np[i])
+            req.out.append(tok)
+            self.pos[i] += 1
+            out.append((req.uid, tok))
+            if tok == self.eos_id or len(req.out) >= req.max_new \
+                    or self.pos[i] >= self.S - 1:
+                req.done = True
+                self.slots[i] = None
+        return out
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Serve a list of requests to completion (continuous batching)."""
+        pending = list(requests)
+        results: Dict[int, List[int]] = {}
+        while pending or any(s is not None for s in self.slots):
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            self.step()
+            for r in requests:
+                if r.done and r.uid not in results:
+                    results[r.uid] = r.out
+        return results

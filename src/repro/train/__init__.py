@@ -1,0 +1,2 @@
+from .train_step import make_loss_fn, make_train_step, xent_loss
+__all__ = ["make_loss_fn", "make_train_step", "xent_loss"]

@@ -1,0 +1,76 @@
+"""Loss + train step: remat, microbatch gradient accumulation, optimizer.
+
+``make_train_step(model, tc)`` returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+suitable for jit with in/out shardings (see launch/dryrun.py, launch/train.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, TrainConfig
+from ..models.lm import Model
+from ..optim.optimizer import make_optimizer
+
+F32 = jnp.float32
+
+
+def xent_loss(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy; logits f32 (B,S,V), targets (B,S) int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        logits, _ = model.forward(params, batch)
+        return xent_loss(logits.astype(F32), batch["targets"])
+    return loss_fn
+
+
+def _split_microbatches(batch, n: int):
+    def split(x):
+        b = x.shape[0]
+        # encoder frames / patch embeds split on batch too
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model: Model, tc: TrainConfig):
+    # remat is applied at the layer-scan body inside the model (see
+    # models/lm.py _maybe_remat) — per-layer recompute, O(1) live activations
+    model.remat = tc.remat
+    loss_fn = make_loss_fn(model)
+    opt = make_optimizer(tc)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state, batch):
+        if tc.microbatches > 1:
+            mb = _split_microbatches(batch, tc.microbatches)
+
+            def acc_body(carry, microbatch):
+                loss_acc, grad_acc = carry
+                loss, grads = grad_fn(params, microbatch)
+                grad_acc = jax.tree.map(jnp.add, grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            zero_grads = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                      params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), F32), zero_grads), mb)
+            loss = loss / tc.microbatches
+            grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+        else:
+            loss, grads = grad_fn(params, batch)
+
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32)))
+                             for g in jax.tree.leaves(grads)))
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step, opt

@@ -1,0 +1,6 @@
+"""Tests run on the REAL device count (1 CPU device) — the 512-device flag
+is set only by launch/dryrun.py (and must never leak into tests)."""
+import os
+
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "tests must not run with forced host device count"

@@ -1,0 +1,145 @@
+"""Unit tests for the in-crossbar stateful arithmetic macros."""
+import numpy as np
+import pytest
+
+from repro.core.crossbar import Crossbar, encode_uint, decode_uint
+from repro.core import arithmetic as A
+
+
+def make_xbar(rows=64, cols=1024, col_parts=32):
+    return Crossbar(rows=rows, cols=cols, row_parts=8, col_parts=col_parts)
+
+
+def test_copy_and_not():
+    xb = make_xbar()
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, size=(64, 1)).astype(np.uint8)
+    xb.load(0, 5, bits)
+    xb.run(A.emit_copy(5, 7))
+    xb.run(A.emit_not(7, 9))
+    assert np.array_equal(xb.mem[:, 7], bits[:, 0])
+    assert np.array_equal(xb.mem[:, 9], 1 - bits[:, 0])
+    assert xb.cycles == 2
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32])
+def test_ripple_add(n):
+    xb = make_xbar()
+    rng = np.random.default_rng(n)
+    a = rng.integers(0, 1 << n, size=64)
+    b = rng.integers(0, 1 << n, size=64)
+    xb.load(0, 0, encode_uint(a, n))
+    xb.load(0, n, encode_uint(b, n))
+    out = list(range(2 * n, 3 * n + 1))
+    # zero col: col 1000 stays 0; scratch at 990..992
+    prog = A.emit_ripple_add(list(range(n)), list(range(n, 2 * n)), out,
+                             (990, 991, 992, 993), zero=1000)
+    xb.run(prog)
+    got = decode_uint(xb.mem[:, out])
+    assert np.array_equal(got, (a + b) % (1 << (n + 1)))
+    assert xb.cycles == 4 * (n + 1)
+
+
+def test_ripple_add_in_place():
+    n = 8
+    xb = make_xbar()
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 1 << n, size=64)
+    b = rng.integers(0, 1 << n, size=64)
+    xb.load(0, 0, encode_uint(a, n))
+    xb.load(0, n, encode_uint(b, n))
+    bcols = list(range(n, 2 * n))
+    prog = A.emit_ripple_add(list(range(n)), bcols, bcols, (990, 991, 992, 993), zero=1000)
+    xb.run(prog)
+    got = decode_uint(xb.mem[:, bcols])
+    assert np.array_equal(got, (a + b) % (1 << n))
+
+
+def test_increment_by_bit():
+    xb = make_xbar()
+    rng = np.random.default_rng(2)
+    cnt = rng.integers(0, 100, size=64)
+    bit = rng.integers(0, 2, size=64)
+    w = 7
+    xb.load(0, 0, encode_uint(cnt, w))
+    xb.load(0, 20, encode_uint(bit, 1))
+    prog = A.emit_increment_by_bit(20, list(range(w)), (990, 991, 992, 993), zero=1000)
+    xb.run(prog)
+    got = decode_uint(xb.mem[:, :w])
+    assert np.array_equal(got, cnt + bit)
+
+
+def test_xnor():
+    xb = make_xbar()
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 2, size=64)
+    b = rng.integers(0, 2, size=64)
+    xb.load(0, 0, encode_uint(a, 1))
+    xb.load(0, 1, encode_uint(b, 1))
+    xb.run(A.emit_xnor(0, 1, 3, t=2))
+    assert np.array_equal(xb.mem[:, 3], (a == b).astype(np.uint8))
+    assert xb.cycles == 2
+
+
+def test_bisection_broadcast():
+    xb = make_xbar(cols=1024, col_parts=32)
+    rng = np.random.default_rng(4)
+    bit = rng.integers(0, 2, size=64)
+    src = 7 * 32 + 3  # partition 7
+    xb.load(0, src, encode_uint(bit, 1))
+    dst = [p * 32 + 5 for p in range(32)]
+    prog = A.emit_bisection_broadcast(src, dst, cp_size=32)
+    xb.run(prog)
+    for c in dst:
+        assert np.array_equal(xb.mem[:, c], bit.astype(np.uint8))
+    assert xb.cycles == 6  # log2(32) + 1
+
+
+def test_tree_popcount():
+    xb = make_xbar(cols=1024, col_parts=32)
+    rng = np.random.default_rng(5)
+    nbits = 12
+    bits = rng.integers(0, 2, size=(64, nbits)).astype(np.uint8)
+    xb.load(0, 0, bits)
+    out = list(range(14, 18))
+    prog = A.emit_tree_popcount(list(range(nbits)), out,
+                                alloc_cols=list(range(18, 80)), zero=1000)
+    # keep everything in one partition group for this test: cols < 1024 fine
+    xb.run(prog)
+    got = decode_uint(xb.mem[:, out])
+    assert np.array_equal(got, bits.sum(axis=1))
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32])
+def test_carry_save_mult(n):
+    P = 32
+    xb = make_xbar(rows=32, cols=2048, col_parts=32)  # cp_size = 64
+    cp = 64
+    rng = np.random.default_rng(n)
+    a = rng.integers(0, 1 << n, size=32)
+    b = rng.integers(0, 1 << n, size=32)
+    # layout: a bits at cols 32.. (partition 0), b at 64+32.. (partition 1);
+    # offsets ≥ 32 avoid the lane scratch columns (offsets 10..21)
+    xb.load(0, 32, encode_uint(a, n))
+    xb.load(0, cp + 32, encode_uint(b, n))
+    # lane columns: per partition p, use cols p*cp + 10..19
+    lanes = A.MultLanes(
+        P=P,
+        a=[p * cp + 10 for p in range(P)],
+        a_alt=[p * cp + 11 for p in range(P)],
+        bcast=[p * cp + 12 for p in range(P)],
+        pp=[p * cp + 13 for p in range(P)],
+        t=[p * cp + 14 for p in range(P)],
+        u=[p * cp + 15 for p in range(P)],
+        S=[[p * cp + 16 for p in range(P)], [p * cp + 17 for p in range(P)]],
+        C=[[p * cp + 18 for p in range(P)], [p * cp + 19 for p in range(P)]],
+    )
+    out = [p * cp + 20 for p in range(P)] + [p * cp + 21 for p in range(P)]
+    out = out[: 2 * n]
+    zero = 9  # col 9 partition 0 (below lane scratch), stays zero
+    prog = A.emit_mult([32 + i for i in range(n)], [cp + 32 + i for i in range(n)],
+                       out, lanes, zero=zero, cp_size=cp)
+    xb.run(prog)
+    got = decode_uint(xb.mem[:, out])
+    want = a.astype(object) * b.astype(object)  # exact (no int64 overflow)
+    assert np.array_equal(got.astype(object), want)

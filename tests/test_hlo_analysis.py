@@ -1,0 +1,59 @@
+"""HLO collective parsing + trip-count correction on synthetic HLO text."""
+from repro.launch import hlo_analysis as H
+
+HLO = """
+HloModule test
+
+%region_cond.1 (arg: (s32[], f32[8])) -> pred[] {
+  %c = s32[] constant(16)
+  %i = s32[] get-tuple-element(%arg), index=0
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+%region_body.2 (arg: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %x = f32[8]{0} get-tuple-element(%arg), index=1
+  %ar = f32[8]{0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%add
+  ROOT %t = (s32[], f32[8]) tuple(%i2, %ar)
+}
+
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %ag = f32[128]{0} all-gather(%p), channel_id=2, replica_groups=[16,16]<=[256], dimensions={0}
+  %w = (s32[], f32[8]) while(%init), condition=%region_cond.1, body=%region_body.2
+  ROOT %out = f32[8]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_computation_parsing():
+    comps = H.parse_computations(HLO)
+    assert "%region_cond.1" in comps
+    assert "%region_body.2" in comps
+    assert "ENTRY" not in str(list(comps))  # entry stored under its own name
+
+
+def test_while_trip_multipliers():
+    comps = H.parse_computations(HLO)
+    mult = H.while_multipliers(comps)
+    assert mult["%region_body.2"] == 16   # loop bound from the condition
+
+
+def test_collective_bytes_and_correction():
+    raw, corrected, wire = H.collective_bytes(HLO)
+    # all-gather: result 128 f32 = 512 B, group 16 -> operand 32 B
+    assert raw["all-gather"] == 32
+    assert corrected["all-gather"] == 32          # entry: x1
+    # all-reduce: 8 f32 = 32 B operand; inside the x16 while body
+    assert raw["all-reduce"] == 32
+    assert corrected["all-reduce"] == 32 * 16
+    # wire: AR ring = 2*(g-1)/g*result = 2*15/16*32 = 60 per trip
+    assert wire["all-reduce"] == 60 * 16
+    assert wire["all-gather"] == int(512 * 15 / 16)
+
+
+def test_roofline_terms_and_dominant():
+    t = H.roofline_terms(197e12, 819e9, 50e9, 256)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 1.0) < 1e-9
+    assert abs(t["collective_s"] - 1.0) < 1e-9
+    t2 = H.roofline_terms(1e12, 819e9, 100e9, 256)
+    assert H.dominant(t2) == "collective_s"

