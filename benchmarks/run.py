@@ -49,6 +49,64 @@ def bench_table2_conv(quick=False):
               f"{r.ours},cycles_ratio_vs_paper={ratio}")
 
 
+def bench_engine(quick=False):
+    """Compiled engine vs the per-op interpreter, end-to-end (load+run+decode).
+
+    Reports the single-array case, the batched multi-instance case (the
+    engine's bit-plane packing simulates up to 64 crossbars per word), and
+    the tiled multi-crossbar matvec that exceeds a single 1024x1024 array.
+    """
+    import numpy as np
+    from repro.core import BinaryMatvecPlan, have_jax, tiled_binary_matvec
+
+    rng = np.random.default_rng(0)
+    m, n = (256, 128) if quick else (1024, 384)
+    plan = BinaryMatvecPlan(m, n)
+    A = rng.choice([-1, 1], size=(m, n))
+    x = rng.choice([-1, 1], size=n)
+    plan.compile()  # exclude one-time compile from the comparison
+
+    t_int = _timeit(lambda: plan.run(A, x, backend="interp"), n=1, warmup=1)
+    print(f"engine/binary_mv_{m}x{n}_interp,{t_int:.0f},backend=interp")
+    for be in ("numpy",) + (("jax",) if have_jax() else ()):
+        t = _timeit(lambda: plan.run(A, x, backend=be), n=3, warmup=1)
+        print(f"engine/binary_mv_{m}x{n}_{be},{t:.0f},"
+              f"speedup_vs_interp={t_int/t:.1f}")
+
+    # batched: B independent crossbar instances in one engine call
+    B = 8 if quick else 32
+    mems = np.zeros((B, plan.rows, plan.cols), dtype=np.uint8)
+    for b in range(B):
+        plan.load_into(mems[b], rng.choice([-1, 1], size=(m, n)),
+                       rng.choice([-1, 1], size=n))
+    xb = plan.new_crossbar()
+
+    def interp_batch():
+        for b in range(B):
+            xb.mem[:, :] = mems[b]
+            xb.run(plan.program)
+
+    t_int = _timeit(interp_batch, n=1, warmup=0)
+    print(f"engine/binary_mv_batch{B}_interp,{t_int:.0f},backend=interp")
+    for be in ("numpy",) + (("jax",) if have_jax() else ()):
+        t = _timeit(lambda: plan.execute_batch(mems, backend=be), n=3,
+                    warmup=1)
+        print(f"engine/binary_mv_batch{B}_{be},{t:.0f},"
+              f"speedup_vs_interp={t_int/t:.1f}")
+
+    # tiled scale-out: (M, K) exceeding a single 1024x1024 crossbar
+    M, K = (2048, 768) if quick else (4096, 2048)
+    A = rng.choice([-1, 1], size=(M, K))
+    xv = rng.choice([-1, 1], size=K)
+    t0 = time.perf_counter()
+    y, info = tiled_binary_matvec(A, xv)
+    us = (time.perf_counter() - t0) * 1e6
+    ok = bool(np.array_equal(y, np.where(A @ xv >= 0, 1, -1)))
+    print(f"engine/tiled_binary_mv_{M}x{K},{us:.0f},"
+          f"tiles={info.n_tiles};cycles={info.cycles};"
+          f"reduce_depth={info.reduce_depth};correct={ok}")
+
+
 def bench_kernels(quick=False):
     """Pallas kernels (interpret mode on CPU) vs jnp oracles: wall time."""
     import jax.numpy as jnp
@@ -147,6 +205,7 @@ def main():
     benches = {
         "table1": bench_table1_matvec,
         "table2": bench_table2_conv,
+        "engine": bench_engine,
         "kernels": bench_kernels,
         "train": bench_train_throughput,
         "roofline": bench_roofline,

@@ -30,9 +30,10 @@ import numpy as np
 from .arithmetic import Program
 from .crossbar import Crossbar
 from .isa import ColOp, InitOp, RowOp
+from .plan import CrossbarPlan
 
 
-class BinaryConvPlan:
+class BinaryConvPlan(CrossbarPlan):
     CTR_W = 4  # counter width; k*k <= 9 assumed (3x3); 5x5 uses 5 bits
 
     def __init__(self, m: int, n: int, k: int, rows: int = 1024,
@@ -192,27 +193,36 @@ class BinaryConvPlan:
 
     # -- driver ---------------------------------------------------------------
 
-    def run(self, A: np.ndarray, K: np.ndarray,
-            xbar: Optional[Crossbar] = None) -> Tuple[np.ndarray, int]:
-        m, n, k = self.m, self.n, self.k
-        assert A.shape == (m, n) and K.shape == (k, k)
+    def ensure_program(self, K: np.ndarray) -> Program:
         if self.program is None or not np.array_equal(K, self.K):
             self.program = self.build(K)
             self.K = K.copy()
-        xb = xbar or Crossbar(self.rows, self.cols, self.parts, self.parts)
-        Abits = (A > 0).astype(np.uint8)
-        for p in range(self.P):
-            for j in range(self.npp):
-                xb.mem[:m, p * self.cp + self.a_off[j]] = Abits[:, p * self.npp + j]
-        xb.run(self.program)
+        return self.program
+
+    def load_into(self, mem: np.ndarray, A: np.ndarray, K: np.ndarray) -> None:
+        m, n, k = self.m, self.n, self.k
+        assert A.shape == (m, n) and K.shape == (k, k)
+        a_cols = np.array([p * self.cp + self.a_off[j]
+                           for p in range(self.P) for j in range(self.npp)])
+        mem[:m, a_cols] = (A > 0).astype(np.uint8)
+
+    def decode_out(self, mem: np.ndarray) -> np.ndarray:
+        k = self.k
         out = np.zeros((self.m_out, self.n_out), dtype=np.int64)
-        for c in range(self.n_out):
-            p, lc = c // self.npp, c % self.npp
-            # out[r] lives at crossbar row r + k - 1 (counter-shift offset)
-            bits = xb.mem[k - 1 : k - 1 + self.m_out,
-                          p * self.cp + self.out_off[lc]]
-            out[:, c] = np.where(bits > 0, 1, -1)
-        return out, xb.cycles
+        c = np.arange(self.n_out)
+        cols = (c // self.npp) * self.cp + np.array(self.out_off)[c % self.npp]
+        # out[r] lives at crossbar row r + k - 1 (counter-shift offset)
+        bits = mem[k - 1 : k - 1 + self.m_out][:, cols]
+        out[:, :] = np.where(bits > 0, 1, -1)
+        return out
+
+    def run(self, A: np.ndarray, K: np.ndarray,
+            xbar: Optional[Crossbar] = None,
+            backend: str = "numpy") -> Tuple[np.ndarray, int]:
+        self.ensure_program(K)
+        out, cycles, _ = self.run_program(
+            lambda mem: self.load_into(mem, A, K), xbar, backend)
+        return self.decode_out(out), cycles
 
     @property
     def cycles(self) -> int:

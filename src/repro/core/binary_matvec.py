@@ -30,6 +30,7 @@ from .arithmetic import Program
 from .crossbar import Crossbar, decode_uint
 from .isa import ColOp, InitOp
 from .layout import duplicate_band
+from .plan import CrossbarPlan
 
 
 class _OffsetAlloc:
@@ -57,7 +58,7 @@ class _OffsetAlloc:
         self.dead.extend(offs)
 
 
-class BinaryMatvecPlan:
+class BinaryMatvecPlan(CrossbarPlan):
     def __init__(self, m: int, n: int, rows: int = 1024, cols: int = 1024,
                  parts: int = 32):
         assert m <= rows
@@ -188,29 +189,33 @@ class BinaryMatvecPlan:
 
     # -- driver ---------------------------------------------------------------
 
-    def run(self, A: np.ndarray, x: np.ndarray,
-            xbar: Optional[Crossbar] = None) -> Tuple[np.ndarray, np.ndarray, int]:
-        """A, x in {−1,+1}. Returns (y_majority ∈ {−1,+1}, popcount, cycles)."""
+    def load_into(self, mem: np.ndarray, A: np.ndarray, x: np.ndarray) -> None:
+        """Write ±1 operands into a (rows, cols) crossbar image."""
         m, n, P, npp, cp = self.m, self.n, self.P, self.npp, self.cp
         assert A.shape == (m, n) and x.shape == (n,)
-        xb = xbar or Crossbar(self.rows, self.cols, self.parts, self.parts)
-        Abits = (A > 0).astype(np.uint8)
-        xbits = (x > 0).astype(np.uint8)
-        for p in range(P):
-            for j in range(npp):
-                xb.mem[:m, p * cp + self.a_off[j]] = Abits[:, p * npp + j]
-                xb.mem[0, p * cp + self.x_off[j]] = xbits[p * npp + j]
-        xb.run(self.program)
-        W = self._W
-        shifted = decode_uint(np.stack([xb.mem[:m, c] for c in self._total_field],
-                                       axis=-1))
-        raw = (shifted + self.n // 2) % (1 << W)
-        y = np.where(xb.mem[:m, self.y_off] > 0, 1, -1)
-        return y, raw, xb.cycles
+        a_cols = np.array([p * cp + self.a_off[j]
+                           for p in range(P) for j in range(npp)])
+        x_cols = np.array([p * cp + self.x_off[j]
+                           for p in range(P) for j in range(npp)])
+        mem[:m, a_cols] = (A > 0).astype(np.uint8)
+        mem[0, x_cols] = (x > 0).astype(np.uint8)
 
-    @property
-    def cycles(self) -> int:
-        return len(self.program)
+    def decode_popcount(self, mem: np.ndarray) -> np.ndarray:
+        """Raw per-row popcount of XNOR matches (host-reducible tile partial)."""
+        W = self._W
+        shifted = decode_uint(mem[: self.m][:, self._total_field])
+        return (shifted + self.n // 2) % (1 << W)
+
+    def decode_y(self, mem: np.ndarray) -> np.ndarray:
+        return np.where(mem[: self.m, self.y_off] > 0, 1, -1)
+
+    def run(self, A: np.ndarray, x: np.ndarray,
+            xbar: Optional[Crossbar] = None,
+            backend: str = "numpy") -> Tuple[np.ndarray, np.ndarray, int]:
+        """A, x in {−1,+1}. Returns (y_majority ∈ {−1,+1}, popcount, cycles)."""
+        out, cycles, _ = self.run_program(
+            lambda mem: self.load_into(mem, A, x), xbar, backend)
+        return self.decode_y(out), self.decode_popcount(out), cycles
 
 
 def matpim_binary_matvec(A: np.ndarray, x: np.ndarray, **kw):
@@ -225,7 +230,7 @@ def matpim_binary_matvec(A: np.ndarray, x: np.ndarray, **kw):
 # ---------------------------------------------------------------------------
 
 
-class NaiveBinaryMatvecPlan:
+class NaiveBinaryMatvecPlan(CrossbarPlan):
     def __init__(self, m: int, n: int, rows: int = 1024, cols: int = 1024,
                  parts: int = 32):
         assert m <= rows and 2 * n + 32 <= cols - 2
@@ -263,18 +268,14 @@ class NaiveBinaryMatvecPlan:
         prog += A_.emit_not(self.counter[W - 1], self.scratch[4])
         return prog
 
-    def run(self, A: np.ndarray, x: np.ndarray) -> Tuple[np.ndarray, int]:
-        m, n = self.m, self.n
-        xb = Crossbar(self.rows, self.cols, self.parts, self.parts)
-        Abits = (A > 0).astype(np.uint8)
-        xbits = (x > 0).astype(np.uint8)
-        for j in range(n):
-            xb.mem[:m, self.a_cols[j]] = Abits[:, j]
-            xb.mem[0, self.x_cols[j]] = xbits[j]
-        xb.run(self.program)
-        y = np.where(xb.mem[:m, self.scratch[4]] > 0, 1, -1)
-        return y, xb.cycles
+    def run(self, A: np.ndarray, x: np.ndarray,
+            backend: str = "numpy") -> Tuple[np.ndarray, int]:
+        m = self.m
 
-    @property
-    def cycles(self) -> int:
-        return len(self.program)
+        def load(mem):
+            mem[:m, self.a_cols] = (A > 0).astype(np.uint8)
+            mem[0, self.x_cols] = (x > 0).astype(np.uint8)
+
+        out, cycles, _ = self.run_program(load, None, backend)
+        y = np.where(out[:m, self.scratch[4]] > 0, 1, -1)
+        return y, cycles

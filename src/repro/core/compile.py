@@ -1,0 +1,239 @@
+"""Compile stateful-logic programs into packed, vectorizable traces.
+
+The cycle-accurate interpreter in ``crossbar.py`` executes one micro-op at a
+time in Python — faithful, but orders of magnitude slower than the physics it
+models (every cycle of a MatPIM program is a fully parallel array event). This
+pass lowers a ``Program`` (list of cycles, each a list of co-scheduled
+``ColOp``/``RowOp``/``InitOp``) into dense integer arrays that the vectorized
+executors in ``engine.py`` replay with a handful of array ops per cycle, and
+batch across B independent crossbars at once.
+
+Lowering
+--------
+Each gate op becomes ``(gate_id, dst, ins[5], mask_id)``: up to ``MAX_FANIN``
+gather slots (padded with the constant-0 cell), the output line, and a write
+mask selecting the participating rows (column mode) or columns (row mode).
+The executors hold memory *bit-plane packed*: cell (r, c) of crossbar b is
+bit b of one machine word, so a FELIX gate evaluates as a short boolean
+word expression (see ``engine.BIT_GATES``) on the gathered input lines —
+B crossbars per word for the price of one. ``InitOp`` cycles lower to
+(row-mask, col-mask, value) rectangles. Row-mode cycles are the transpose
+picture of column-mode cycles.
+
+Executor memory carries one extra row and column: the extra column (index
+``cols``) is the constant-0 gather slot and the no-op write target for
+column-mode padding ops (their write masks are all-False, so it stays 0);
+symmetrically the extra row (index ``rows``) serves row mode.
+
+Scheduling/partition validation — the physical co-schedulability the latency
+claims rest on — runs ONCE here, instead of on every interpreted ``run()``.
+The compiled trace also carries the exact cycle count and op-category stats,
+bit-identical to what the interpreter would have accumulated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .crossbar import SchedulingError, col_group, groups_disjoint, row_group
+from .isa import GATES, ColOp, InitOp, RowOp
+
+MODE_COL, MODE_ROW, MODE_INIT = 0, 1, 2
+MAX_FANIN = 5
+
+# stable gate numbering shared with engine.BIT_GATES
+GATE_IDS: Dict[str, int] = {
+    "NOT": 0, "OR2": 1, "NOR2": 2, "NOR3": 3,
+    "NAND2": 4, "MIN3": 5, "MIN5": 6, "OAI3": 7,
+}
+
+
+class _MaskPool:
+    """Deduplicated pool of boolean selection masks (length ``size + 1``).
+
+    The trailing entry is the padding row/column and is never selected, so
+    masked writes can never touch the constant-0 / no-op cells. Id 0 is the
+    all-False mask used by padding ops.
+    """
+
+    def __init__(self, size: int):
+        self.size = size
+        self._ids: Dict[bytes, int] = {}
+        self.masks: List[np.ndarray] = []
+        self.id_for(np.zeros(size + 1, dtype=bool))
+
+    def id_for(self, mask: np.ndarray) -> int:
+        key = mask.tobytes()
+        mid = self._ids.get(key)
+        if mid is None:
+            mid = len(self.masks)
+            self._ids[key] = mid
+            self.masks.append(mask)
+        return mid
+
+    def sel_id(self, sel: object) -> int:
+        """Mask id for a row/col selection (None, slice, int, or index list)."""
+        mask = np.zeros(self.size + 1, dtype=bool)
+        if sel is None:
+            mask[: self.size] = True
+        elif isinstance(sel, slice):
+            mask[: self.size][sel] = True
+        else:
+            idx = np.atleast_1d(np.asarray(sel, dtype=np.intp))
+            if idx.size and (idx.min() < 0 or idx.max() >= self.size):
+                raise SchedulingError(f"selection out of range: {sel}")
+            mask[idx] = True
+        return self.id_for(mask)
+
+    def stack(self) -> np.ndarray:
+        return np.stack(self.masks, axis=0)
+
+
+@dataclasses.dataclass
+class CompiledProgram:
+    """Packed trace of one program on a fixed crossbar geometry.
+
+    Gate-cycle arrays are padded to ``W`` (max gate ops in any cycle;
+    ``nops`` holds the real per-cycle count so ragged executors can skip the
+    padding) and init cycles to ``I`` rectangles. Padding ops carry the
+    all-False mask id 0 and write the sacrificial extra column/row.
+    """
+
+    rows: int
+    cols: int
+    n_cycles: int
+    W: int                     # max gate ops per cycle (padded width)
+    I: int                     # max init rectangles per cycle
+    mode: np.ndarray           # (T,)      uint8  MODE_COL / MODE_ROW / MODE_INIT
+    nops: np.ndarray           # (T,)      int32  real gate ops (0 for init cycles)
+    gate: np.ndarray           # (T, W)    int8   GATE_IDS value
+    dst: np.ndarray            # (T, W)    int32  output col (col mode) / row (row mode)
+    ins: np.ndarray            # (T, W, 5) int32  gather slots (padded w/ const-0 cell)
+    sel: np.ndarray            # (T, W)    int32  mask id (row pool in col mode, col pool in row mode)
+    init_r: np.ndarray         # (T, I)    int32  row-mask ids
+    init_c: np.ndarray         # (T, I)    int32  col-mask ids
+    init_v: np.ndarray         # (T, I)    uint8  init values
+    row_masks: np.ndarray      # (nR, rows+1) bool
+    col_masks: np.ndarray      # (nC, cols+1) bool
+    stats: Dict[str, int]      # interpreter-identical op-category counters
+
+    def __post_init__(self):
+        self._caches: Dict[object, object] = {}  # executor-private memoization
+
+    @property
+    def nbytes(self) -> int:
+        return sum(
+            a.nbytes for a in (self.mode, self.nops, self.gate, self.dst,
+                               self.ins, self.sel, self.init_r, self.init_c,
+                               self.init_v, self.row_masks, self.col_masks))
+
+
+def compile_program(
+    program: Sequence[Sequence[object]],
+    rows: int,
+    cols: int,
+    row_parts: int = 32,
+    col_parts: int = 32,
+    validate: bool = True,
+) -> CompiledProgram:
+    """Lower ``program`` into a :class:`CompiledProgram` for (rows, cols).
+
+    Raises :class:`SchedulingError` on any cycle the interpreter would have
+    rejected (mixed modes, overlapping partition groups, out-of-range cells).
+    Empty cycles are skipped, matching ``Crossbar.cycle``.
+    """
+    assert rows % row_parts == 0 and cols % col_parts == 0
+    rp_size, cp_size = rows // row_parts, cols // col_parts
+    zero_col, zero_row = cols, rows  # extra always-0 cells
+
+    row_pool, col_pool = _MaskPool(rows), _MaskPool(cols)
+    stats = {"col_ops": 0, "row_ops": 0, "init_cycles": 0, "gate_evals": 0}
+    # per cycle: (mode, [(gate_id, dst, ins5, sel)], [(rsel, csel, val)])
+    lowered: List[Tuple[int, list, list]] = []
+
+    def lower_gate(gate_name: str, inputs: Sequence[int], zero_cell: int):
+        gate = GATES[gate_name]
+        if gate.arity != len(inputs):
+            raise SchedulingError(
+                f"{gate_name} arity {gate.arity} != {len(inputs)} inputs")
+        ins = list(inputs) + [zero_cell] * (MAX_FANIN - len(inputs))
+        return GATE_IDS[gate_name], ins
+
+    for cyc in program:
+        if not cyc:
+            continue
+        kinds = {type(op) for op in cyc}
+        if len(kinds) != 1:
+            raise SchedulingError(f"mixed op modes in one cycle: {kinds}")
+        kind = kinds.pop()
+
+        if kind is InitOp:
+            entries = [(row_pool.sel_id(op.rows), col_pool.sel_id(op.cols),
+                        int(op.value)) for op in cyc]
+            lowered.append((MODE_INIT, [], entries))
+            stats["init_cycles"] += 1
+        elif kind is ColOp:
+            if validate and not groups_disjoint(
+                    [col_group(o, cols, cp_size) for o in cyc]):
+                raise SchedulingError(
+                    "column ops overlap column-partition groups: "
+                    + ", ".join(str(col_group(o, cols, cp_size)) for o in cyc))
+            ops = []
+            for op in cyc:
+                gid, ins = lower_gate(op.gate, op.in_cols, zero_col)
+                ops.append((gid, op.out_col, ins, row_pool.sel_id(op.rows)))
+            lowered.append((MODE_COL, ops, []))
+            stats["col_ops"] += len(cyc)
+            stats["gate_evals"] += len(cyc)
+        elif kind is RowOp:
+            if validate and not groups_disjoint(
+                    [row_group(o, rows, rp_size) for o in cyc]):
+                raise SchedulingError("row ops overlap row-partition groups")
+            ops = []
+            for op in cyc:
+                gid, ins = lower_gate(op.gate, op.in_rows, zero_row)
+                ops.append((gid, op.out_row, ins, col_pool.sel_id(op.cols)))
+            lowered.append((MODE_ROW, ops, []))
+            stats["row_ops"] += len(cyc)
+            stats["gate_evals"] += len(cyc)
+        else:
+            raise SchedulingError(f"unknown op kind {kind}")
+
+    T = len(lowered)
+    W = max((len(ops) for _, ops, _ in lowered), default=0) or 1
+    I = max((len(ents) for _, _, ents in lowered), default=0) or 1
+
+    mode = np.zeros(T, dtype=np.uint8)
+    nops = np.zeros(T, dtype=np.int32)
+    gate = np.zeros((T, W), dtype=np.int8)
+    dst = np.empty((T, W), dtype=np.int32)
+    ins = np.empty((T, W, MAX_FANIN), dtype=np.int32)
+    sel = np.zeros((T, W), dtype=np.int32)
+    init_r = np.zeros((T, I), dtype=np.int32)
+    init_c = np.zeros((T, I), dtype=np.int32)
+    init_v = np.zeros((T, I), dtype=np.uint8)
+
+    for t, (m, ops, ents) in enumerate(lowered):
+        mode[t] = m
+        nops[t] = len(ops)
+        pad_cell = zero_row if m == MODE_ROW else zero_col
+        dst[t, :] = pad_cell
+        ins[t, :, :] = pad_cell
+        for w, (gid, d, i5, s) in enumerate(ops):
+            gate[t, w] = gid
+            dst[t, w] = d
+            ins[t, w] = i5
+            sel[t, w] = s
+        for i, (rs, cs, v) in enumerate(ents):
+            init_r[t, i] = rs
+            init_c[t, i] = cs
+            init_v[t, i] = v
+
+    return CompiledProgram(
+        rows=rows, cols=cols, n_cycles=T, W=W, I=I,
+        mode=mode, nops=nops, gate=gate, dst=dst, ins=ins, sel=sel,
+        init_r=init_r, init_c=init_c, init_v=init_v,
+        row_masks=row_pool.stack(), col_masks=col_pool.stack(), stats=stats,
+    )

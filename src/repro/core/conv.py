@@ -36,9 +36,10 @@ from .arithmetic import Program
 from .crossbar import Crossbar, decode_uint, encode_uint
 from .isa import ColOp, InitOp, RowOp
 from .layout import PartitionLayout, duplicate_band
+from .plan import CrossbarPlan
 
 
-class ConvPlan:
+class ConvPlan(CrossbarPlan):
     def __init__(
         self,
         m: int,
@@ -194,33 +195,33 @@ class ConvPlan:
 
     # -- driver ---------------------------------------------------------------
 
-    def run(self, A: np.ndarray, K: np.ndarray,
-            xbar: Optional[Crossbar] = None) -> Tuple[np.ndarray, int]:
-        m, n, k, N = self.m, self.n, self.k, self.N
-        assert A.shape == (m, n) and K.shape == (k, k)
+    def ensure_program(self, K: np.ndarray) -> Program:
+        """(Re)build the program if missing or specialized to a different K."""
         k_dependent = self.specialize or self.stream_kernel
         if self.program is None or (k_dependent and not np.array_equal(K, self.K)):
             self.program = self.build(K)
             self.K = K.copy()
-        xb = xbar or Crossbar(self.rows, self.cols, self.parts, self.parts)
+        return self.program
 
+    def load_into(self, mem: np.ndarray, A: np.ndarray, K: np.ndarray) -> None:
+        m, n, k, N = self.m, self.n, self.k, self.N
+        assert A.shape == (m, n) and K.shape == (k, k)
+        a_cols = np.array(self.a_fields).reshape(-1)   # [e][b] order
         for i in range(self.alpha):
             lo, hi = self.band(i)
             c0 = i * self.nb  # first input col of block i
-            for e in range(self.nin):
-                col = c0 + e
-                vals = A[:, col] if col < n else np.zeros(m, dtype=A.dtype)
-                bits = encode_uint(vals, N)
-                for b in range(N):
-                    xb.mem[lo:hi, self.a_fields[e][b]] = bits[:, b]
+            blk = np.zeros((m, self.nin), dtype=np.int64)
+            valid = min(self.nin, n - c0)
+            if valid > 0:
+                blk[:, :valid] = A[:, c0 : c0 + valid]
+            mem[lo:hi, a_cols] = encode_uint(blk, N).reshape(m, -1)
             if not self.stream_kernel:
                 # kernel bits, packed bit-serially
                 kb = encode_uint(K.reshape(-1), N).reshape(-1)  # flat LSB-first
-                for beta, bit in enumerate(kb):
-                    xb.mem[lo + beta % m, self.kstore[beta // m]] = bit
+                beta = np.arange(kb.size)
+                mem[lo + beta % m, np.array(self.kstore)[beta // m]] = kb
 
-        xb.run(self.program)
-
+    def decode_out(self, mem: np.ndarray) -> np.ndarray:
         out = np.zeros((self.m_out, self.n_out), dtype=object)
         for i in range(self.alpha):
             lo, _ = self.band(i)
@@ -228,10 +229,17 @@ class ConvPlan:
                 col = i * self.nb + c
                 if col >= self.n_out:
                     break
-                bits = np.stack([xb.mem[lo : lo + self.m_out, cc]
-                                 for cc in self.out_fields[c]], axis=-1)
+                bits = mem[lo : lo + self.m_out][:, self.out_fields[c]]
                 out[:, col] = decode_uint(bits)
-        return out, xb.cycles
+        return out
+
+    def run(self, A: np.ndarray, K: np.ndarray,
+            xbar: Optional[Crossbar] = None,
+            backend: str = "numpy") -> Tuple[np.ndarray, int]:
+        self.ensure_program(K)
+        out, cycles, _ = self.run_program(
+            lambda mem: self.load_into(mem, A, K), xbar, backend)
+        return self.decode_out(out), cycles
 
     @property
     def cycles(self) -> int:

@@ -29,6 +29,54 @@ class SchedulingError(RuntimeError):
     """A cycle contained ops that cannot physically execute together."""
 
 
+# -- partition-group helpers (shared with the compile-time validator) ---------
+
+
+def col_group(op: ColOp, cols: int, cp_size: int) -> Tuple[int, int]:
+    cs = op.cols()
+    lo, hi = min(cs), max(cs)
+    if not (0 <= lo and hi < cols):
+        raise SchedulingError(f"column out of range: {cs}")
+    return (lo // cp_size, hi // cp_size)
+
+
+def row_group(op: RowOp, rows: int, rp_size: int) -> Tuple[int, int]:
+    rs = op.rows()
+    lo, hi = min(rs), max(rs)
+    if not (0 <= lo and hi < rows):
+        raise SchedulingError(f"row out of range: {rs}")
+    return (lo // rp_size, hi // rp_size)
+
+
+def groups_disjoint(groups: Sequence[Tuple[int, int]]) -> bool:
+    ordered = sorted(groups)
+    for (a0, a1), (b0, b1) in zip(ordered, ordered[1:]):
+        if b0 <= a1:
+            return False
+    return True
+
+
+def init_rect(mem: np.ndarray, op: InitOp) -> None:
+    """Apply an ``InitOp`` with rectangle semantics for every index combo.
+
+    Slices index directly; any fancy selection (list / tuple / ndarray / int)
+    is normalised to an index array, and two fancy axes go through ``np.ix_``
+    so they always select the outer-product rectangle — plain
+    ``mem[list_a, list_b]`` would zip them element-wise instead.
+    """
+    rows_sel, cols_sel = op.rows, op.cols
+    r_fancy = not isinstance(rows_sel, slice)
+    c_fancy = not isinstance(cols_sel, slice)
+    if r_fancy:
+        rows_sel = np.atleast_1d(np.asarray(rows_sel, dtype=np.intp))
+    if c_fancy:
+        cols_sel = np.atleast_1d(np.asarray(cols_sel, dtype=np.intp))
+    if r_fancy and c_fancy:
+        mem[np.ix_(rows_sel, cols_sel)] = op.value
+    else:
+        mem[rows_sel, cols_sel] = op.value
+
+
 class Crossbar:
     def __init__(
         self,
@@ -66,26 +114,12 @@ class Crossbar:
     # -- partition-group computation ----------------------------------------
 
     def _col_group(self, op: ColOp) -> Tuple[int, int]:
-        cs = op.cols()
-        lo, hi = min(cs), max(cs)
-        if not (0 <= lo and hi < self.cols):
-            raise SchedulingError(f"column out of range: {cs}")
-        return (lo // self.cp_size, hi // self.cp_size)
+        return col_group(op, self.cols, self.cp_size)
 
     def _row_group(self, op: RowOp) -> Tuple[int, int]:
-        rs = op.rows()
-        lo, hi = min(rs), max(rs)
-        if not (0 <= lo and hi < self.rows):
-            raise SchedulingError(f"row out of range: {rs}")
-        return (lo // self.rp_size, hi // self.rp_size)
+        return row_group(op, self.rows, self.rp_size)
 
-    @staticmethod
-    def _disjoint(groups: Sequence[Tuple[int, int]]) -> bool:
-        ordered = sorted(groups)
-        for (a0, a1), (b0, b1) in zip(ordered, ordered[1:]):
-            if b0 <= a1:
-                return False
-        return True
+    _disjoint = staticmethod(groups_disjoint)
 
     # -- execution -----------------------------------------------------------
 
@@ -100,11 +134,7 @@ class Crossbar:
 
         if kind is InitOp:
             for op in ops:
-                if isinstance(op.rows, (list, np.ndarray)) and isinstance(
-                        op.cols, (list, np.ndarray)):
-                    self.mem[np.ix_(op.rows, op.cols)] = op.value
-                else:
-                    self.mem[op.rows, op.cols] = op.value
+                init_rect(self.mem, op)
             self.stats["init_cycles"] += 1
         elif kind is ColOp:
             if self.validate and not self._disjoint([self._col_group(o) for o in ops]):

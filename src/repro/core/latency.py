@@ -21,6 +21,17 @@ from .binary_matvec import BinaryMatvecPlan, NaiveBinaryMatvecPlan
 from .conv import ConvPlan
 from .isa import ColOp, InitOp, RowOp
 from .matvec import MatvecPlan
+from .plan import CrossbarPlan
+
+
+def compiled_cycles(plan: CrossbarPlan) -> int:
+    """Cycle count via the compile-then-execute path.
+
+    Compiling validates scheduling once and yields ``n_cycles ==
+    len(program)`` by construction; tests cross-check this against both the
+    closed-form ``plan.cycles`` and interpreter execution.
+    """
+    return plan.compile().n_cycles
 
 
 @dataclasses.dataclass

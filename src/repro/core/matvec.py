@@ -26,9 +26,10 @@ from .arithmetic import Program
 from .crossbar import Crossbar, decode_uint, encode_uint
 from .isa import InitOp, RowOp
 from .layout import PartitionLayout, duplicate_band
+from .plan import CrossbarPlan
 
 
-class MatvecPlan:
+class MatvecPlan(CrossbarPlan):
     """Layout + program for one (m, n, N, α) balanced matvec."""
 
     def __init__(
@@ -122,32 +123,26 @@ class MatvecPlan:
 
     # -- driver ---------------------------------------------------------------
 
-    def run(self, A: np.ndarray, x: np.ndarray, xbar: Optional[Crossbar] = None
-            ) -> Tuple[np.ndarray, int]:
+    def load_into(self, mem: np.ndarray, A: np.ndarray, x: np.ndarray) -> None:
+        """Write operand bits into a (rows, cols) crossbar image."""
         m, n, N, nb = self.m, self.n, self.N, self.nb
         assert A.shape == (m, n) and x.shape == (n,)
-        xb = xbar or Crossbar(self.rows, self.cols, self.parts, self.parts)
-
+        a_cols = np.array(self.a_fields).reshape(-1)   # [j][b] order
+        x_cols = np.array(self.x_fields).reshape(-1)
         for i in range(self.alpha):
             blkA = A[:, i * nb : (i + 1) * nb]
-            for j in range(nb):
-                bits = encode_uint(blkA[:, j], N)
-                for b in range(N):
-                    xb.mem[i * m : (i + 1) * m, self.a_fields[j][b]] = bits[:, b]
-            blkx = x[i * nb : (i + 1) * nb]
-            xbits = encode_uint(blkx, N)
-            for j in range(nb):
-                for b in range(N):
-                    xb.mem[i * m, self.x_fields[j][b]] = xbits[j, b]
+            mem[i * m : (i + 1) * m, a_cols] = encode_uint(blkA, N).reshape(m, -1)
+            xbits = encode_uint(x[i * nb : (i + 1) * nb], N)
+            mem[i * m, x_cols] = xbits.reshape(-1)
 
-        xb.run(self.program)
-        out_bits = np.stack([xb.mem[:m, c] for c in self.acc], axis=-1)
-        y = decode_uint(out_bits)
-        return y, xb.cycles
+    def decode_y(self, mem: np.ndarray) -> np.ndarray:
+        return decode_uint(mem[: self.m][:, self.acc])
 
-    @property
-    def cycles(self) -> int:
-        return len(self.program)
+    def run(self, A: np.ndarray, x: np.ndarray, xbar: Optional[Crossbar] = None,
+            backend: str = "numpy") -> Tuple[np.ndarray, int]:
+        out, cycles, _ = self.run_program(
+            lambda mem: self.load_into(mem, A, x), xbar, backend)
+        return self.decode_y(out), cycles
 
 
 def matpim_matvec(A: np.ndarray, x: np.ndarray, N: int, alpha: int = 1,

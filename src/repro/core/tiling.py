@@ -1,0 +1,345 @@
+"""Multi-crossbar tiling: scale matvec/conv past a single 1024×1024 array.
+
+MatPIM evaluates one crossbar; real workloads don't fit. This layer maps an
+arbitrary ``(M, K)`` matrix-vector product or a large 2D convolution onto a
+grid of identical crossbar tiles that all execute the *same* compiled program
+as one batch (``engine.execute`` packs them into machine-word bit-planes), and
+reduces the tile partials on the host with a binary tree — the multi-core PIM
+organization of the scale-out literature.
+
+Latency accounting: the B tiles are independent arrays running in lockstep,
+so the in-memory latency of a tiled operation is the per-tile program length
+(``result.cycles``); the host/inter-array reduction is reported separately as
+``result.reduce_depth`` levels of element-wise adds.
+
+Padding conventions keep tile programs identical across the grid:
+
+* full-precision matvec/conv pad with zeros (adds 0 mod 2^W / contributes 0);
+* binary matvec pads A and x with +1 — each padded column contributes exactly
+  one XNOR match, subtracted from the reduced popcount on the host;
+* binary conv pads the input with +1; affected outputs fall outside the
+  cropped valid region.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .binary_conv import BinaryConvPlan
+from .binary_matvec import BinaryMatvecPlan
+from .conv import ConvPlan
+from .matvec import MatvecPlan
+
+
+@dataclasses.dataclass
+class TiledResult:
+    grid: Tuple[int, ...]      # tile grid shape
+    n_tiles: int
+    cycles: int                # per-tile program length (tiles run in lockstep)
+    reduce_depth: int          # host tree-reduction levels (0 = none needed)
+    backend: str
+
+
+def tree_reduce(parts: List[np.ndarray]) -> Tuple[np.ndarray, int]:
+    """Pairwise binary-tree reduction; returns (sum, depth)."""
+    depth = 0
+    while len(parts) > 1:
+        parts = [parts[i] + parts[i + 1] if i + 1 < len(parts) else parts[i]
+                 for i in range(0, len(parts), 2)]
+        depth += 1
+    return parts[0], depth
+
+
+def majority_sign(pop: np.ndarray, n: int) -> np.ndarray:
+    """±1 majority from XNOR popcounts: sign(⟨a, x⟩) = sign(2·pop − n).
+
+    Ties (dot exactly 0, even n) break to +1, matching the in-array plan's
+    ``pop >= n/2`` threshold. Works for odd n too — ``pop >= n // 2`` would
+    misclassify dot = −1 as +1 there.
+    """
+    return np.where(2 * pop - n >= 0, 1, -1)
+
+
+def _execute_tiles(plan, n_tiles: int, load_tile, decode_tile,
+                   backend: str, max_batch: Optional[int]):
+    """Load/execute/decode tiles in bounded-size batches.
+
+    Chunking only bounds host memory — every chunk runs the identical
+    compiled program, so the reported in-array latency (one program length,
+    all tiles in lockstep) is unchanged.
+    """
+    step = max_batch or 64
+    results = [None] * n_tiles
+    cycles = 0
+    for s in range(0, n_tiles, step):
+        e = min(n_tiles, s + step)
+        mems = np.zeros((e - s, plan.rows, plan.cols), dtype=np.uint8)
+        for b in range(s, e):
+            load_tile(b, mems[b - s])
+        res = plan.execute_batch(mems, backend=backend)
+        cycles = res.cycles
+        for b in range(s, e):
+            results[b] = decode_tile(b, res.mem[b - s])
+    return results, cycles
+
+
+def max_matvec_block(N: int, cols: int = 1024, parts: int = 32) -> int:
+    """Largest per-tile n (α=1 elements) that fits the column budget."""
+    cp = cols // parts
+    budget = (cp - 12 + 1) * parts          # data offsets incl. offset 1
+    overhead = 4 * N + 4                    # prod + acc (+aliased acc2) + scratch
+    return max(1, (budget - overhead) // (2 * N))
+
+
+# ---------------------------------------------------------------------------
+# Full-precision matvec:  y = A @ x  mod 2^(2N),  A (M, K) N-bit unsigned
+# ---------------------------------------------------------------------------
+
+
+class TiledMatvec:
+    def __init__(self, M: int, K: int, N: int, tile_m: Optional[int] = None,
+                 tile_k: Optional[int] = None, rows: int = 1024,
+                 cols: int = 1024, parts: int = 32):
+        self.M, self.K, self.N = M, K, N
+        self.tile_m = tile_m or min(M, rows)
+        self.tile_k = tile_k or min(K, max_matvec_block(N, cols, parts))
+        self.gm = math.ceil(M / self.tile_m)
+        self.gk = math.ceil(K / self.tile_k)
+        self.plan = MatvecPlan(self.tile_m, self.tile_k, N, alpha=1,
+                               rows=rows, cols=cols, parts=parts)
+
+    def run(self, A: np.ndarray, x: np.ndarray, backend: str = "numpy",
+            max_batch: Optional[int] = None
+            ) -> Tuple[np.ndarray, TiledResult]:
+        M, K, N = self.M, self.K, self.N
+        tm, tk, gm, gk = self.tile_m, self.tile_k, self.gm, self.gk
+        assert A.shape == (M, K) and x.shape == (K,)
+        Ap = np.zeros((gm * tm, gk * tk), dtype=np.int64)
+        Ap[:M, :K] = A
+        xp = np.zeros(gk * tk, dtype=np.int64)
+        xp[:K] = x
+
+        plan = self.plan
+
+        def load(b, mem):
+            i, j = divmod(b, gk)
+            plan.load_into(mem, Ap[i * tm : (i + 1) * tm,
+                                   j * tk : (j + 1) * tk],
+                           xp[j * tk : (j + 1) * tk])
+
+        partials, cycles = _execute_tiles(
+            plan, gm * gk, load,
+            lambda b, mem: plan.decode_y(mem).astype(object),
+            backend, max_batch)
+
+        W = plan.W  # accumulator width: results exact mod 2^(2N)
+        y = np.empty(gm * tm, dtype=object)
+        depth = 0
+        for i in range(gm):
+            total, depth = tree_reduce(partials[i * gk : (i + 1) * gk])
+            y[i * tm : (i + 1) * tm] = total % (1 << W)
+        return y[:M], TiledResult((gm, gk), gm * gk, cycles, depth, backend)
+
+
+def tiled_matvec(A: np.ndarray, x: np.ndarray, N: int, **kw):
+    M, K = A.shape
+    backend = kw.pop("backend", "numpy")
+    max_batch = kw.pop("max_batch", None)
+    t = TiledMatvec(M, K, N, **kw)
+    return t.run(A, x, backend=backend, max_batch=max_batch)
+
+
+# ---------------------------------------------------------------------------
+# Binary matvec:  y = sign(<A[r], x>),  A (M, K), x (K,) in {-1, +1}
+# ---------------------------------------------------------------------------
+
+
+class TiledBinaryMatvec:
+    def __init__(self, M: int, K: int, tile_m: Optional[int] = None,
+                 tile_k: Optional[int] = None, rows: int = 1024,
+                 cols: int = 1024, parts: int = 32):
+        self.M, self.K = M, K
+        self.tile_m = tile_m or min(M, rows)
+        if tile_k is None:
+            # widest n per tile: parts * npp with 2*npp + 6 <= cols/parts
+            tile_k = parts * ((cols // parts - 6) // 2)
+            tile_k = min(tile_k, math.ceil(K / parts) * parts)
+        self.tile_k = tile_k
+        assert self.tile_k % parts == 0
+        self.gm = math.ceil(M / self.tile_m)
+        self.gk = math.ceil(K / self.tile_k)
+        self.plan = BinaryMatvecPlan(self.tile_m, self.tile_k,
+                                     rows=rows, cols=cols, parts=parts)
+
+    def run(self, A: np.ndarray, x: np.ndarray, backend: str = "numpy",
+            max_batch: Optional[int] = None
+            ) -> Tuple[np.ndarray, TiledResult]:
+        M, K = self.M, self.K
+        tm, tk, gm, gk = self.tile_m, self.tile_k, self.gm, self.gk
+        assert A.shape == (M, K) and x.shape == (K,)
+        # pad with +1/+1: every padded column XNOR-matches, adding exactly
+        # (gk*tk - K) to each row's reduced popcount — subtracted below
+        Ap = np.ones((gm * tm, gk * tk), dtype=np.int64)
+        Ap[:M, :K] = A
+        xp = np.ones(gk * tk, dtype=np.int64)
+        xp[:K] = x
+        n_pad = gk * tk - K
+
+        plan = self.plan
+
+        def load(b, mem):
+            i, j = divmod(b, gk)
+            plan.load_into(mem, Ap[i * tm : (i + 1) * tm,
+                                   j * tk : (j + 1) * tk],
+                           xp[j * tk : (j + 1) * tk])
+
+        partials, cycles = _execute_tiles(
+            plan, gm * gk, load,
+            lambda b, mem: plan.decode_popcount(mem).astype(np.int64),
+            backend, max_batch)
+
+        pop = np.empty((gm, tm), dtype=np.int64)
+        depth = 0
+        for i in range(gm):
+            total, depth = tree_reduce(partials[i * gk : (i + 1) * gk])
+            pop[i] = total - n_pad
+        pop_flat = pop.reshape(-1)[:M]
+        y = majority_sign(pop_flat, K)
+        self.last_popcounts = pop_flat  # XNOR matches per row (dot = 2*pop - K)
+        return y, TiledResult((gm, gk), gm * gk, cycles, depth, backend)
+
+    def popcounts(self, A: np.ndarray, x: np.ndarray,
+                  backend: str = "numpy") -> np.ndarray:
+        """Per-row XNOR popcounts (so ⟨A[r], x⟩ = 2·pop[r] − K)."""
+        self.run(A, x, backend=backend)
+        return self.last_popcounts
+
+    def popcounts_many(self, A: np.ndarray, X: np.ndarray,
+                       backend: str = "numpy",
+                       max_batch: Optional[int] = None) -> np.ndarray:
+        """Popcounts of one A against J vectors: X is (J, K), returns (J, M).
+
+        All J · gm · gk (vector, tile) pairs execute as ONE engine batch —
+        with bit-plane packing, up to 64 of them cost a single word-level
+        simulation.
+        """
+        M, K = self.M, self.K
+        tm, tk, gm, gk = self.tile_m, self.tile_k, self.gm, self.gk
+        J = X.shape[0]
+        assert A.shape == (M, K) and X.shape == (J, K)
+        Ap = np.ones((gm * tm, gk * tk), dtype=np.int64)
+        Ap[:M, :K] = A
+        Xp = np.ones((J, gk * tk), dtype=np.int64)
+        Xp[:, :K] = X
+        n_pad = gk * tk - K
+        plan = self.plan
+
+        def load(b, mem):
+            j, rest = divmod(b, gm * gk)
+            i, kk = divmod(rest, gk)
+            plan.load_into(mem, Ap[i * tm : (i + 1) * tm,
+                                   kk * tk : (kk + 1) * tk],
+                           Xp[j, kk * tk : (kk + 1) * tk])
+
+        partials, _ = _execute_tiles(
+            plan, J * gm * gk, load,
+            lambda b, mem: plan.decode_popcount(mem).astype(np.int64),
+            backend, max_batch)
+
+        pop = np.empty((J, gm * tm), dtype=np.int64)
+        for j in range(J):
+            for i in range(gm):
+                s = (j * gm + i) * gk
+                total, _ = tree_reduce(partials[s : s + gk])
+                pop[j, i * tm : (i + 1) * tm] = total - n_pad
+        return pop[:, :M]
+
+
+def tiled_binary_matvec(A: np.ndarray, x: np.ndarray, **kw):
+    M, K = A.shape
+    backend = kw.pop("backend", "numpy")
+    max_batch = kw.pop("max_batch", None)
+    t = TiledBinaryMatvec(M, K, **kw)
+    return t.run(A, x, backend=backend, max_batch=max_batch)
+
+
+# ---------------------------------------------------------------------------
+# Convolutions: tile the image with (k-1)-halos; outputs concatenate, so the
+# host reduction degenerates to assembly (reduce_depth 0)
+# ---------------------------------------------------------------------------
+
+
+class TiledConv2d:
+    def __init__(self, H: int, Wd: int, k: int, N: int, tile_m: int = 64,
+                 tile_n: int = 8, binary: bool = False, rows: int = 1024,
+                 cols: int = 1024, parts: int = 32, **plan_kw):
+        assert tile_m > k - 1 and tile_n > k - 1
+        self.H, self.Wd, self.k, self.N = H, Wd, k, N
+        self.binary = binary
+        self.tile_m, self.tile_n = tile_m, tile_n
+        self.oh, self.ow = H - k + 1, Wd - k + 1            # valid output
+        self.th_out = tile_m - k + 1                        # out rows per tile
+        self.tw_out = tile_n - k + 1
+        self.gh = math.ceil(self.oh / self.th_out)
+        self.gw = math.ceil(self.ow / self.tw_out)
+        if binary:
+            self.plan = BinaryConvPlan(tile_m, tile_n, k, rows=rows,
+                                       cols=cols, parts=parts)
+        else:
+            self.plan = ConvPlan(tile_m, tile_n, k, N, rows=rows, cols=cols,
+                                 parts=parts, **plan_kw)
+
+    def run(self, A: np.ndarray, Kk: np.ndarray, backend: str = "numpy",
+            max_batch: Optional[int] = None
+            ) -> Tuple[np.ndarray, TiledResult]:
+        H, Wd, k = self.H, self.Wd, self.k
+        assert A.shape == (H, Wd) and Kk.shape == (k, k)
+        pad_val = 1 if self.binary else 0
+        Hp = self.gh * self.th_out + k - 1
+        Wp = self.gw * self.tw_out + k - 1
+        Ap = np.full((Hp, Wp), pad_val, dtype=np.int64)
+        Ap[:H, :Wd] = A
+
+        plan = self.plan
+        plan.ensure_program(Kk)
+
+        def load(b, mem):
+            i, j = divmod(b, self.gw)
+            r0, c0 = i * self.th_out, j * self.tw_out
+            plan.load_into(mem, Ap[r0 : r0 + self.tile_m,
+                                   c0 : c0 + self.tile_n], Kk)
+
+        tiles, cycles = _execute_tiles(
+            plan, self.gh * self.gw, load,
+            lambda b, mem: plan.decode_out(mem), backend, max_batch)
+
+        dtype = np.int64 if self.binary else object
+        out = np.zeros((self.gh * self.th_out, self.gw * self.tw_out),
+                       dtype=dtype)
+        for i in range(self.gh):
+            for j in range(self.gw):
+                out[i * self.th_out : (i + 1) * self.th_out,
+                    j * self.tw_out : (j + 1) * self.tw_out] = \
+                    tiles[i * self.gw + j]
+        return out[: self.oh, : self.ow], TiledResult(
+            (self.gh, self.gw), self.gh * self.gw, cycles, 0, backend)
+
+
+def tiled_conv2d(A: np.ndarray, Kk: np.ndarray, N: int, **kw):
+    H, Wd = A.shape
+    backend = kw.pop("backend", "numpy")
+    max_batch = kw.pop("max_batch", None)
+    t = TiledConv2d(H, Wd, Kk.shape[0], N, **kw)
+    return t.run(A, Kk, backend=backend, max_batch=max_batch)
+
+
+def tiled_binary_conv2d(A: np.ndarray, Kk: np.ndarray, **kw):
+    H, Wd = A.shape
+    backend = kw.pop("backend", "numpy")
+    max_batch = kw.pop("max_batch", None)
+    kw.setdefault("tile_n", 64)
+    t = TiledConv2d(H, Wd, Kk.shape[0], 1, binary=True, **kw)
+    return t.run(A, Kk, backend=backend, max_batch=max_batch)

@@ -57,6 +57,36 @@ def conv2d_shift_ref(a: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
     return out
 
 
+def crossbar_binary_matvec_ref(a: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """±1 matvec dot values from the compiled MatPIM crossbar engine.
+
+    Ground truth for the Pallas kernels straight from the simulated hardware:
+    the (tiled, batched) stateful-logic program computes per-row XNOR
+    popcounts, and ⟨a, x⟩ = 2·popcount − K. Accepts any (M, K); rows/columns
+    beyond one 1024×1024 array are handled by the tiling layer.
+    """
+    from repro.core.tiling import TiledBinaryMatvec
+
+    a = np.asarray(a, dtype=np.int64)
+    x = np.asarray(x, dtype=np.int64)
+    M, K = a.shape
+    pop = TiledBinaryMatvec(M, K).popcounts(a, x)
+    return 2 * pop - K
+
+
+def crossbar_binary_matmul_ref(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """±1 GEMM dot values via the compiled crossbar engine: every (column of
+    ``b``, crossbar tile) pair runs in one bit-plane-packed engine batch.
+    ``b`` is (N, K); returns (M, N) int dots."""
+    from repro.core.tiling import TiledBinaryMatvec
+
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    M, K = a.shape
+    pops = TiledBinaryMatvec(M, K).popcounts_many(a, b)  # (N, M)
+    return (2 * pops - K).T
+
+
 def binary_conv2d_ref(a: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
     """Channel-packed binary conv: a (H, W, C/32) uint32, k (kh, kw, C/32)
     uint32, output int32 ±1 dot over (kh, kw, C)."""

@@ -1,0 +1,70 @@
+"""Hypothesis import guard with a deterministic fallback.
+
+The tier-1 container may not have ``hypothesis`` installed. Instead of
+erroring at collection (the seed behavior) or skipping entire modules —
+which would silently drop every *deterministic* test that happens to share a
+file with a property test — this shim provides a minimal drop-in for the
+subset of the hypothesis API the suite uses (``given``, ``settings``,
+``st.integers``, ``st.lists``). The fallback draws a fixed number of
+seeded-random examples, so property tests still execute (with reduced rigor)
+and the rest of the module is untouched. With hypothesis installed, the real
+library is re-exported unchanged.
+"""
+import inspect
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10, unique=False):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                if not unique:
+                    return [elem.draw(rng) for _ in range(n)]
+                vals, seen = [], set()
+                for _ in range(1000):
+                    if len(vals) >= n:
+                        break
+                    v = elem.draw(rng)
+                    if v not in seen:
+                        seen.add(v)
+                        vals.append(v)
+                return vals
+            return _Strategy(draw)
+
+    def settings(max_examples=10, **_kw):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+        return deco
+
+    def given(*strats):
+        def deco(f):
+            @functools.wraps(f)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0xC0FFEE)
+                n = min(getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES),
+                        _FALLBACK_EXAMPLES)
+                for _ in range(n):
+                    f(*args, *[s.draw(rng) for s in strats], **kwargs)
+            # hide the drawn parameters from pytest's fixture resolution
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -4,3 +4,16 @@ import os
 
 assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
     "tests must not run with forced host device count"
+
+# Persistent XLA compilation cache: the model-smoke/serve tests are dominated
+# by jit compiles, so repeat local runs and cache-restoring CI get much
+# faster. Harmless no-op if the jax version lacks the option.
+try:
+    import jax
+
+    jax.config.update("jax_compilation_cache_dir",
+                      os.path.join(os.path.dirname(__file__), "..",
+                                   ".jax_cache"))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
+except Exception:  # pragma: no cover - older jax
+    pass

@@ -1,0 +1,295 @@
+"""Compiled-vs-interpreted equivalence + compile/engine unit tests.
+
+The contract: for any program the interpreter accepts, both compiled
+backends produce bit-identical final memory, the same cycle count, and the
+same op-category stats. Checked on randomized instances of all four
+algorithm plans (small crossbars for speed) and on targeted micro-programs.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (BinaryConvPlan, BinaryMatvecPlan, ConvPlan,
+                        Crossbar, MatvecPlan, SchedulingError,
+                        compile_program, execute, have_jax)
+from repro.core.compile import GATE_IDS
+from repro.core.crossbar import init_rect
+from repro.core.engine import BIT_GATES, _pack, _unpack, _word_dtype
+from repro.core.isa import GATES, ColOp, InitOp, RowOp
+
+BACKENDS = ["numpy"] + (["jax"] if have_jax() else [])
+
+
+def _interp(plan, mem0):
+    xb = Crossbar(plan.rows, plan.cols, plan.parts, plan.parts)
+    xb.mem[:, :] = mem0
+    xb.run(plan.program)
+    return xb
+
+
+def assert_equivalent(plan, mem0):
+    """Interpreter vs compiled backends: memory, cycles, stats identical."""
+    xb = _interp(plan, mem0)
+    cp = plan.compile()
+    assert cp.n_cycles == len([c for c in plan.program if c]) == xb.cycles
+    for backend in BACKENDS:
+        res = execute(cp, mem0, backend=backend)
+        assert res.cycles == xb.cycles, backend
+        assert res.stats == xb.stats, backend
+        np.testing.assert_array_equal(res.mem, xb.mem, err_msg=backend)
+
+
+# -- gate lowering ------------------------------------------------------------
+
+
+def test_bit_gates_match_isa_exhaustively():
+    """Every boolean word gate equals the ISA gate fn on all input combos."""
+    for name, gid in GATE_IDS.items():
+        arity, fn = BIT_GATES[gid]
+        assert GATES[name].arity == arity
+        for bits in range(1 << arity):
+            ins = [np.uint8((bits >> i) & 1) for i in range(arity)]
+            want = int(GATES[name].fn(*[np.array([b]) for b in ins])[0])
+            got = int(fn(*[np.array([b], dtype=np.uint64) for b in ins])[0]) & 1
+            assert got == want, (name, bits)
+
+
+@pytest.mark.parametrize("B", [1, 3, 8, 9, 17, 33, 64])
+def test_bitplane_pack_roundtrip(B):
+    rng = np.random.default_rng(B)
+    mem = (rng.random((B, 12, 20)) < 0.5).astype(np.uint8)
+    buf = _pack(mem, _word_dtype(B))
+    np.testing.assert_array_equal(_unpack(buf, B, 12, 20), mem)
+
+
+# -- micro-program equivalence ------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000))
+def test_random_microprogram_equivalence(seed):
+    """Random well-formed cycles (one op per partition, init cycles, masked
+    row/col ops) run identically on every backend."""
+    rng = np.random.default_rng(seed)
+    rows, cols, parts = 32, 64, 4
+    rp, cps = rows // parts, cols // parts  # 8 rows, 16 cols per partition
+    gates = list(GATE_IDS)
+    prog = []
+    for _ in range(rng.integers(3, 12)):
+        kind = rng.integers(0, 3)
+        if kind == 0:  # column cycle, one gate per partition
+            cyc = []
+            for p in range(parts):
+                g = gates[rng.integers(len(gates))]
+                ar = GATES[g].arity
+                offs = rng.choice(cps, size=ar + 1, replace=False)
+                sel = [None, slice(2, rows - 1),
+                       list(rng.choice(rows, size=3, replace=False))][
+                           rng.integers(3)]
+                cyc.append(ColOp(g, tuple(int(p * cps + o) for o in offs[:ar]),
+                                 int(p * cps + offs[ar]), sel))
+            prog.append(cyc)
+        elif kind == 1:  # row cycle, one gate per row partition
+            cyc = []
+            for q in range(parts):
+                g = gates[rng.integers(len(gates))]
+                ar = GATES[g].arity
+                offs = rng.choice(rp, size=ar + 1, replace=False)
+                sel = [None, slice(0, cols // 2),
+                       list(rng.choice(cols, size=4, replace=False))][
+                           rng.integers(3)]
+                cyc.append(RowOp(g, tuple(int(q * rp + o) for o in offs[:ar]),
+                                 int(q * rp + offs[ar]), sel))
+            prog.append(cyc)
+        else:  # init cycle
+            rsel = [slice(None), list(rng.choice(rows, 4, replace=False))][
+                rng.integers(2)]
+            csel = [slice(0, cols, 2),
+                    list(rng.choice(cols, 5, replace=False))][rng.integers(2)]
+            prog.append([InitOp(rsel, csel, int(rng.integers(2)))])
+
+    mem0 = (rng.random((rows, cols)) < 0.5).astype(np.uint8)
+    xb = Crossbar(rows, cols, parts, parts)
+    xb.mem[:, :] = mem0
+    xb.run(prog)
+    cp = compile_program(prog, rows, cols, parts, parts)
+    for backend in BACKENDS:
+        res = execute(cp, mem0, backend=backend)
+        np.testing.assert_array_equal(res.mem, xb.mem, err_msg=backend)
+        assert res.cycles == xb.cycles and res.stats == xb.stats
+
+
+def test_batched_execution_matches_per_instance():
+    """One batched engine call == B separate interpreter runs."""
+    rng = np.random.default_rng(0)
+    prog = [
+        [InitOp(slice(None), [0, 1, 7], 0)],
+        [ColOp("NOT", (0,), 1, None), ColOp("NAND2", (8, 9), 10, None)],
+        [RowOp("OR2", (0, 1), 2, slice(0, 12))],
+        [ColOp("MIN5", (1, 2, 3, 4, 5), 7, [0, 3, 5])],
+    ]
+    rows, cols, parts = 8, 16, 2
+    B = 11
+    mems = (rng.random((B, rows, cols)) < 0.5).astype(np.uint8)
+    cp = compile_program(prog, rows, cols, parts, parts)
+    for backend in BACKENDS:
+        res = execute(cp, mems, backend=backend)
+        for b in range(B):
+            xb = Crossbar(rows, cols, parts, parts)
+            xb.mem[:, :] = mems[b]
+            xb.run(prog)
+            np.testing.assert_array_equal(res.mem[b], xb.mem,
+                                          err_msg=f"{backend} b={b}")
+
+
+# -- plan-level equivalence (all four algorithms) -----------------------------
+#
+# Plans (and the conv kernels their programs specialize on) are cached at
+# module scope so each plan's program compiles/jits once; @given then varies
+# only the loaded operand data across examples.
+
+_PLAN_CACHE = {}
+
+
+def _cached(key, factory):
+    if key not in _PLAN_CACHE:
+        _PLAN_CACHE[key] = factory()
+    return _PLAN_CACHE[key]
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_matvec_plan_equivalence(seed):
+    rng = np.random.default_rng(seed)
+    N, alpha = 8, 2
+    m, n = 32, 4 * alpha
+    plan = _cached("matvec",
+                   lambda: MatvecPlan(m, n, N, alpha, rows=256, cols=512,
+                                      parts=16))
+    mem0 = np.zeros((256, 512), np.uint8)
+    plan.load_into(mem0, rng.integers(0, 1 << N, size=(m, n)),
+                   rng.integers(0, 1 << N, size=n))
+    assert_equivalent(plan, mem0)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_binary_matvec_plan_equivalence(seed):
+    rng = np.random.default_rng(seed)
+    m, n = 48, 64
+    plan = _cached("binary_matvec",
+                   lambda: BinaryMatvecPlan(m, n, rows=64, cols=256, parts=8))
+    mem0 = np.zeros((64, 256), np.uint8)
+    plan.load_into(mem0, rng.choice([-1, 1], size=(m, n)),
+                   rng.choice([-1, 1], size=n))
+    assert_equivalent(plan, mem0)
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(0, 10_000))
+def test_conv_plan_equivalence(seed):
+    rng = np.random.default_rng(seed)
+    m, n, k, N = 32, 6, 3, 4
+    plan = _cached("conv",
+                   lambda: ConvPlan(m, n, k, N, rows=128, cols=512, parts=16))
+    K = _cached("conv_K", lambda: np.random.default_rng(99).integers(
+        0, 1 << N, size=(k, k)))
+    plan.ensure_program(K)
+    mem0 = np.zeros((128, 512), np.uint8)
+    plan.load_into(mem0, rng.integers(0, 1 << N, size=(m, n)), K)
+    assert_equivalent(plan, mem0)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_binary_conv_plan_equivalence(seed):
+    rng = np.random.default_rng(seed)
+    m, n, k = 32, 32, 3
+    plan = _cached("binary_conv",
+                   lambda: BinaryConvPlan(m, n, k, rows=64, cols=256, parts=8))
+    K = _cached("binary_conv_K", lambda: np.random.default_rng(99).choice(
+        [-1, 1], size=(k, k)))
+    plan.ensure_program(K)
+    mem0 = np.zeros((64, 256), np.uint8)
+    plan.load_into(mem0, rng.choice([-1, 1], size=(m, n)), K)
+    assert_equivalent(plan, mem0)
+
+
+def test_caller_xbar_state_preserved():
+    """run(..., xbar=) loads operands into the crossbar's EXISTING memory:
+    cells outside the plan's layout survive (legacy driver contract)."""
+    rng = np.random.default_rng(0)
+    N, m, n = 8, 32, 4
+    plan = MatvecPlan(m, n, N, 1, rows=64, cols=512, parts=16)
+    xb = Crossbar(64, 512, 16, 16)
+    # a_fields columns are operand-only (never a gate output or init target);
+    # a row past m is untouched by the program
+    sentinel = (63, plan.a_fields[0][0])
+    xb.mem[sentinel] = 1
+    A = rng.integers(0, 1 << N, size=(m, n))
+    x = rng.integers(0, 1 << N, size=n)
+    y, _ = plan.run(A, x, xbar=xb)
+    assert xb.mem[sentinel] == 1
+    want = (A.astype(object) @ x.astype(object)) % (1 << (2 * N))
+    assert np.array_equal(y.astype(object), want)
+
+
+# -- compile-time validation --------------------------------------------------
+
+
+def test_compile_rejects_overlapping_partitions():
+    prog = [[ColOp("NOT", (1,), 2, None), ColOp("NOT", (3,), 4, None)]]
+    with pytest.raises(SchedulingError):
+        compile_program(prog, 8, 64, 2, 2)  # both ops in partition group 0
+
+
+def test_compile_rejects_mixed_modes():
+    prog = [[ColOp("NOT", (1,), 2, None), RowOp("OR2", (0, 0), 1, None)]]
+    with pytest.raises(SchedulingError):
+        compile_program(prog, 8, 64, 2, 2)
+
+
+def test_compile_counts_match_interpreter_contract():
+    plan = BinaryMatvecPlan(32, 32, rows=64, cols=256, parts=8)
+    cp = plan.compile()
+    assert cp.n_cycles == plan.cycles == len(plan.program)
+
+
+# -- InitOp rectangle semantics (regression) ----------------------------------
+
+
+@pytest.mark.parametrize("rows_sel,cols_sel", [
+    ([1, 3], slice(0, 4)),
+    (slice(0, 4), [1, 3]),
+    ([1, 3], [0, 2, 5]),
+    ((1, 3), (0, 2, 5)),          # tuples: pre-fix, zipped element-wise
+    (np.array([2, 4]), slice(1, 6, 2)),
+    (2, [0, 7]),
+    (slice(None), slice(None)),
+])
+def test_initop_rectangle_semantics(rows_sel, cols_sel):
+    """InitOp must always set the full rows x cols rectangle, for every
+    combination of slice / list / tuple / ndarray / int selections."""
+    ref = np.zeros((8, 8), np.uint8)
+    r_idx = np.arange(8)[rows_sel] if isinstance(rows_sel, slice) \
+        else np.atleast_1d(rows_sel)
+    c_idx = np.arange(8)[cols_sel] if isinstance(cols_sel, slice) \
+        else np.atleast_1d(cols_sel)
+    ref[np.ix_(r_idx, c_idx)] = 1
+
+    # interpreter
+    xb = Crossbar(8, 8, 2, 2)
+    xb.cycle([InitOp(rows_sel, cols_sel, 1)])
+    np.testing.assert_array_equal(xb.mem, ref)
+
+    # compiled engine
+    cp = compile_program([[InitOp(rows_sel, cols_sel, 1)]], 8, 8, 2, 2)
+    for backend in BACKENDS:
+        res = execute(cp, np.zeros((8, 8), np.uint8), backend=backend)
+        np.testing.assert_array_equal(res.mem, ref, err_msg=backend)
+
+
+def test_init_rect_helper_direct():
+    mem = np.zeros((6, 6), np.uint8)
+    init_rect(mem, InitOp((0, 2), (1, 3), 1))
+    assert mem.sum() == 4 and mem[0, 1] == mem[0, 3] == mem[2, 1] == mem[2, 3] == 1

@@ -1,10 +1,17 @@
-"""End-to-end correctness of the four MatPIM algorithms (simulator-executed)."""
+"""End-to-end correctness of the four MatPIM algorithms (simulator-executed).
+
+Runs on the compiled engine (the default ``run`` backend); equivalence with
+the legacy interpreter is enforced separately in ``test_compile_engine.py``.
+Large paper-scale configurations are marked ``slow`` (deselected by default).
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (BinaryConvPlan, BinaryMatvecPlan, ConvPlan,
                         MatvecPlan, NaiveBinaryMatvecPlan)
+
+slow = pytest.mark.slow
 
 
 def ref_matvec(A, x, W):
@@ -37,7 +44,7 @@ def ref_binary_conv(A, K):
 
 @pytest.mark.parametrize("m,n,N,alpha", [
     (64, 8, 8, 1), (64, 8, 8, 2), (64, 16, 16, 2), (32, 32, 8, 4),
-    (128, 64, 32, 8),
+    pytest.param(128, 64, 32, 8, marks=slow),
 ])
 def test_matvec(m, n, N, alpha):
     rng = np.random.default_rng(m * n + N)
@@ -49,12 +56,17 @@ def test_matvec(m, n, N, alpha):
     assert cycles == plan.cycles  # executing takes exactly len(program)
 
 
+_SCALAR_PLAN = {}
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 6), st.integers(0, 2 ** 16 - 1), st.integers(0, 2 ** 16 - 1))
 def test_matvec_property_scalar(seed, a, b):
     """1x1 matvec == scalar multiplication mod 2^2N (property-based)."""
     N = 16
-    plan = MatvecPlan(32, 8, N, 1)
+    if N not in _SCALAR_PLAN:  # lazy: setdefault would rebuild per example
+        _SCALAR_PLAN[N] = MatvecPlan(32, 8, N, 1)
+    plan = _SCALAR_PLAN[N]
     rng = np.random.default_rng(seed)
     A = rng.integers(0, 1 << N, size=(32, 8)).astype(np.int64)
     A[0, 0] = a
@@ -67,7 +79,8 @@ def test_matvec_property_scalar(seed, a, b):
 # -- binary matvec --------------------------------------------------------------
 
 
-@pytest.mark.parametrize("m,n", [(64, 32), (256, 128), (1024, 384)])
+@pytest.mark.parametrize("m,n", [(64, 32), (256, 128),
+                                 pytest.param(1024, 384, marks=slow)])
 def test_binary_matvec(m, n):
     rng = np.random.default_rng(n)
     A = rng.choice([-1, 1], size=(m, n))
@@ -96,7 +109,7 @@ def test_binary_matvec_naive_matches():
 
 @pytest.mark.parametrize("m,n,k,N,special", [
     (64, 6, 3, 8, False), (64, 10, 3, 8, False), (64, 8, 5, 8, False),
-    (64, 6, 3, 8, True), (128, 12, 3, 16, False),
+    (64, 6, 3, 8, True), pytest.param(128, 12, 3, 16, False, marks=slow),
 ])
 def test_conv(m, n, k, N, special):
     rng = np.random.default_rng(m + n + k)
@@ -117,7 +130,9 @@ def test_conv_kernel_specialization_faster():
 # -- binary conv -------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("m,n,k", [(64, 64, 3), (128, 128, 3), (128, 64, 5)])
+@pytest.mark.parametrize("m,n,k", [(64, 64, 3),
+                                   pytest.param(128, 128, 3, marks=slow),
+                                   (128, 64, 5)])
 def test_binary_conv(m, n, k):
     rng = np.random.default_rng(m + n)
     A = rng.choice([-1, 1], size=(m, n))

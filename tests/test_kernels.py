@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.binary_matmul import binary_matmul
@@ -57,6 +57,30 @@ def test_binary_matmul_property(mi, ni, ki):
                                    interpret=True))
     assert np.abs(got).max() <= K
     assert ((got - K) % 2 == 0).all()
+
+
+def test_crossbar_binary_matvec_oracle():
+    """The crossbar-engine matvec oracle equals the dense ±1 dot product."""
+    rng = np.random.default_rng(11)
+    M, K = 24, 64
+    a = rng.choice([-1, 1], size=(M, K))
+    x = rng.choice([-1, 1], size=K)
+    np.testing.assert_array_equal(ref.crossbar_binary_matvec_ref(a, x),
+                                  a @ x)
+
+
+def test_binary_matmul_vs_crossbar_engine():
+    """The Pallas kernel agrees with the compiled MatPIM crossbar simulator —
+    the oracle is the simulated stateful-logic hardware itself, not jnp."""
+    rng = np.random.default_rng(5)
+    M, N, K = 16, 4, 64
+    a = rng.choice([-1, 1], size=(M, K)).astype(np.float32)
+    b = rng.choice([-1, 1], size=(N, K)).astype(np.float32)
+    got = np.asarray(binary_matmul(ref.pack_bits(jnp.asarray(a)),
+                                   ref.pack_bits(jnp.asarray(b)),
+                                   interpret=True))
+    want = ref.crossbar_binary_matmul_ref(a, b)
+    np.testing.assert_array_equal(got, want)
 
 
 # -- split-K matvec ---------------------------------------------------------------

@@ -9,6 +9,10 @@ import pytest
 
 from repro.core import latency
 
+# Table II builds full-size (1024-row, 128k-cycle) conv programs — ~40 s of
+# pure program generation, so its tests carry the ``slow`` marker and are
+# deselected by default; Table I builds in ~1 s and always runs.
+
 
 @pytest.fixture(scope="module")
 def table1():
@@ -18,6 +22,14 @@ def table1():
 @pytest.fixture(scope="module")
 def table2():
     return {r.config: r for r in latency.build_table2()}
+
+
+def test_compiled_cycles_agree_with_program_length():
+    """The compiled trace reports exactly len(program) cycles (the latency
+    tables' counts are therefore engine-exact by construction)."""
+    from repro.core import BinaryMatvecPlan
+    plan = BinaryMatvecPlan(64, 64, rows=64, cols=256, parts=8)
+    assert latency.compiled_cycles(plan) == plan.cycles
 
 
 def test_table1_flexibility(table1):
@@ -57,6 +69,7 @@ def test_binary_mv_speedup(table1):
     assert naive / fast > 20  # paper: 38.6x; ours: ~27x
 
 
+@pytest.mark.slow
 def test_table2_within_model_factor(table2):
     for cfg, paper in [
         ("1024x4 3x3 N=32", 15352), ("1024x8 3x3 N=32", 39897),
@@ -69,6 +82,7 @@ def test_table2_within_model_factor(table2):
         assert 0.8 < ratio < 1.25, (cfg, ratio)
 
 
+@pytest.mark.slow
 def test_binary_conv_speedup(table2):
     rows = [r for r in latency.build_table2() if r.config == "1024x256 3x3 N=1"]
     naive = next(r for r in rows if "naive" in r.name).ours
@@ -76,6 +90,7 @@ def test_binary_conv_speedup(table2):
     assert naive / fast > 4  # paper: 11.9x; ours: ~5.7x (multi-pass layout)
 
 
+@pytest.mark.slow
 def test_conv_faster_than_imaging(table2):
     """The paper's 2x-vs-IMAGING claim: our proposed conv at 1024x4 is well
     below the published IMAGING baseline (28760)."""

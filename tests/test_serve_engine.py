@@ -21,12 +21,27 @@ def setup():
     return cfg, model, params
 
 
-def oracle_continuation(model, params, cfg, prompt, n):
+_ORACLE_FWD = {}
+
+
+def oracle_continuation(model, params, cfg, prompt, n, pad_to=64):
+    """Greedy continuation via full forwards at a FIXED padded length.
+
+    Padding to one shape keeps this at a single jit compilation instead of
+    one per sequence length (the models are causal, so positions past the
+    current token cannot affect its logits); the jitted forward is memoized
+    per model so repeated oracle calls reuse one compilation.
+    """
+    if id(model) not in _ORACLE_FWD:
+        _ORACLE_FWD[id(model)] = jax.jit(
+            lambda p, t: model.forward(p, {"tokens": t})[0])
+    fwd = _ORACLE_FWD[id(model)]
     toks = list(prompt)
     for _ in range(n):
-        logits, _ = model.forward(
-            params, {"tokens": jnp.asarray(toks, jnp.int32)[None]})
-        toks.append(int(jnp.argmax(logits[0, -1, : cfg.vocab])))
+        padded = np.zeros(pad_to, np.int32)
+        padded[: len(toks)] = toks
+        logits = fwd(params, jnp.asarray(padded)[None])
+        toks.append(int(jnp.argmax(logits[0, len(toks) - 1, : cfg.vocab])))
     return toks[len(prompt):]
 
 

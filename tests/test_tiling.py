@@ -1,0 +1,148 @@
+"""Multi-crossbar tiling: correctness past the single-array ceiling."""
+import numpy as np
+import pytest
+
+from repro.core import tiled_binary_conv2d, tiled_binary_matvec, tiled_conv2d, \
+    tiled_matvec
+from repro.core.tiling import TiledBinaryMatvec, max_matvec_block, tree_reduce
+
+
+def ref_binary_mv(A, x):
+    # independent reference: sign of the actual dot (ties -> +1)
+    return np.where(A @ x >= 0, 1, -1)
+
+
+def test_tree_reduce():
+    parts = [np.array([i]) for i in range(7)]
+    total, depth = tree_reduce(parts)
+    assert total[0] == 21 and depth == 3
+
+
+def test_max_matvec_block_matches_plan_budget():
+    from repro.core import MatvecPlan
+    n = max_matvec_block(32)
+    MatvecPlan(1024, n, 32, 1)  # must fit
+    with pytest.raises(RuntimeError):
+        MatvecPlan(1024, n + 1, 32, 1)
+
+
+def test_tiled_matvec_exceeds_single_array():
+    """M > rows and K > one array's element budget (N=32 ⇒ 8 elems/array)."""
+    rng = np.random.default_rng(0)
+    M, K, N = 2048, 32, 32
+    A = rng.integers(0, 1 << N, size=(M, K)).astype(np.int64)
+    x = rng.integers(0, 1 << N, size=K).astype(np.int64)
+    y, info = tiled_matvec(A, x, N)
+    ref = (A.astype(object) @ x.astype(object)) % (1 << 64)
+    assert np.array_equal(y, ref)
+    assert info.grid == (2, 4) and info.n_tiles == 8 and info.reduce_depth == 2
+
+
+def test_tiled_matvec_unaligned_padding():
+    rng = np.random.default_rng(1)
+    M, K, N = 100, 19, 8
+    A = rng.integers(0, 1 << N, size=(M, K)).astype(np.int64)
+    x = rng.integers(0, 1 << N, size=K).astype(np.int64)
+    y, info = tiled_matvec(A, x, N, tile_m=64, tile_k=8)
+    ref = (A.astype(object) @ x.astype(object)) % (1 << 16)
+    assert np.array_equal(y, ref)
+    assert info.grid == (2, 3)
+
+
+def test_tiled_binary_matvec_odd_k_sign():
+    """Regression: odd K must follow sign(dot), not pop >= K // 2 — a row
+    with dot = -1 has pop = K // 2 and used to decode as +1."""
+    K = 33
+    x = np.ones(K, dtype=np.int64)
+    A = np.ones((2, K), dtype=np.int64)
+    A[0, :17] = -1          # dot = -1  -> y must be -1
+    A[1, :16] = -1          # dot = +1  -> y must be +1
+    y, _ = tiled_binary_matvec(A, x, tile_m=2, tile_k=64)
+    assert np.array_equal(y, [-1, 1])
+    assert np.array_equal(y, ref_binary_mv(A, x))
+
+
+@pytest.mark.parametrize("M,K", [(1500, 500), (2048, 768)])
+def test_tiled_binary_matvec(M, K):
+    rng = np.random.default_rng(M + K)
+    A = rng.choice([-1, 1], size=(M, K))
+    x = rng.choice([-1, 1], size=K)
+    y, info = tiled_binary_matvec(A, x)
+    assert np.array_equal(y, ref_binary_mv(A, x))
+    assert info.n_tiles > 1
+
+
+@pytest.mark.slow
+def test_tiled_binary_matvec_4096x2048():
+    """The acceptance-scale config: 4x the rows, 5 K-tiles of one array."""
+    rng = np.random.default_rng(7)
+    M, K = 4096, 2048
+    A = rng.choice([-1, 1], size=(M, K))
+    x = rng.choice([-1, 1], size=K)
+    y, info = tiled_binary_matvec(A, x)
+    assert np.array_equal(y, ref_binary_mv(A, x))
+    assert info.grid[0] == 4 and info.n_tiles >= 20
+
+
+def test_tiled_binary_matvec_popcounts():
+    rng = np.random.default_rng(3)
+    M, K = 70, 96
+    A = rng.choice([-1, 1], size=(M, K))
+    x = rng.choice([-1, 1], size=K)
+    pop = TiledBinaryMatvec(M, K, tile_m=64, tile_k=32).popcounts(A, x)
+    assert np.array_equal(pop, ((A * x[None, :]) > 0).sum(axis=1))
+
+
+def test_tiled_popcounts_many_one_batch():
+    """J vectors × tile grid in a single engine batch == per-vector runs."""
+    rng = np.random.default_rng(6)
+    M, K, J = 70, 96, 5
+    A = rng.choice([-1, 1], size=(M, K))
+    X = rng.choice([-1, 1], size=(J, K))
+    t = TiledBinaryMatvec(M, K, tile_m=64, tile_k=32)
+    pops = t.popcounts_many(A, X)
+    want = ((A[None, :, :] * X[:, None, :]) > 0).sum(axis=2)
+    assert np.array_equal(pops, want)
+
+
+def test_tiled_backend_interp_equivalence():
+    """backend='interp' routes the tile batch through the legacy
+    interpreter and matches the compiled result exactly."""
+    rng = np.random.default_rng(8)
+    M, K = 96, 64
+    A = rng.choice([-1, 1], size=(M, K))
+    x = rng.choice([-1, 1], size=K)
+    kw = dict(tile_m=64, tile_k=32, rows=64, cols=256, parts=8)
+    y_np, _ = tiled_binary_matvec(A, x, **kw)
+    y_it, _ = tiled_binary_matvec(A, x, backend="interp", **kw)
+    assert np.array_equal(y_np, y_it) and np.array_equal(y_np,
+                                                         ref_binary_mv(A, x))
+
+
+def test_tiled_conv2d():
+    rng = np.random.default_rng(4)
+    H, W, k, N = 100, 14, 3, 8
+    A = rng.integers(0, 1 << N, size=(H, W)).astype(np.int64)
+    K = rng.integers(0, 1 << N, size=(k, k)).astype(np.int64)
+    out, info = tiled_conv2d(A, K, N, tile_m=64, tile_n=8)
+    ref = np.zeros((H - k + 1, W - k + 1), dtype=object)
+    for v in range(k):
+        for h in range(k):
+            ref += A[v:H - k + 1 + v, h:h + W - k + 1].astype(object) * int(K[v, h])
+    ref = np.vectorize(lambda v: int(v) % (1 << N), otypes=[object])(ref)
+    assert np.array_equal(out, ref)
+    assert info.n_tiles == 4
+
+
+def test_tiled_binary_conv2d():
+    rng = np.random.default_rng(5)
+    H, W, k = 150, 130, 3
+    A = rng.choice([-1, 1], size=(H, W))
+    K = rng.choice([-1, 1], size=(k, k))
+    out, info = tiled_binary_conv2d(A, K, tile_m=96, tile_n=64)
+    ref = np.zeros((H - k + 1, W - k + 1), dtype=np.int64)
+    for v in range(k):
+        for h in range(k):
+            ref += A[v:H - k + 1 + v, h:h + W - k + 1] * K[v, h]
+    assert np.array_equal(out, np.where(ref >= 0, 1, -1))
+    assert info.n_tiles > 1
