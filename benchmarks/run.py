@@ -2,14 +2,51 @@
 benchmarks + the roofline collector. Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
+
+The ``engine`` and ``device`` benches additionally write stable-schema
+``BENCH_engine.json`` / ``BENCH_device.json`` at the repo root (uploaded as
+a CI artifact) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
 
 import numpy as np
+
+ROOT = Path(__file__).resolve().parent.parent
+RESULTS_DIR = ROOT / "results"      # dryrun/roofline JSONs, CWD-independent
+
+# benches that persist a BENCH_<name>.json perf record at the repo root
+_JSON_BENCHES = ("engine", "device")
+_RECORDS: dict = {}
+_CUR: list = [None]
+
+
+def _rec(name: str, value, derived: str = "") -> None:
+    """Print one CSV row and record it for the bench's JSON artifact."""
+    shown = (str(value) if not isinstance(value, float)
+             else f"{value:.0f}" if abs(value) >= 100 else f"{value:.4f}")
+    print(f"{name},{shown},{derived}")
+    if _CUR[0] in _JSON_BENCHES:
+        _RECORDS.setdefault(_CUR[0], []).append(
+            {"name": name, "value": float(value), "derived": derived})
+
+
+def _write_bench_json(bench: str, quick: bool) -> None:
+    path = ROOT / f"BENCH_{bench}.json"
+    payload = {
+        "schema": 1,
+        "bench": bench,
+        "quick": bool(quick),
+        "generated_by": "benchmarks/run.py",
+        "metrics": _RECORDS.get(bench, []),
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path}", file=sys.stderr)
 
 
 def _timeit(fn, n=3, warmup=1):
@@ -67,11 +104,11 @@ def bench_engine(quick=False):
     plan.compile()  # exclude one-time compile from the comparison
 
     t_int = _timeit(lambda: plan.run(A, x, backend="interp"), n=1, warmup=1)
-    print(f"engine/binary_mv_{m}x{n}_interp,{t_int:.0f},backend=interp")
+    _rec(f"engine/binary_mv_{m}x{n}_interp", t_int, "backend=interp")
     for be in ("numpy",) + (("jax",) if have_jax() else ()):
         t = _timeit(lambda: plan.run(A, x, backend=be), n=3, warmup=1)
-        print(f"engine/binary_mv_{m}x{n}_{be},{t:.0f},"
-              f"speedup_vs_interp={t_int/t:.1f}")
+        _rec(f"engine/binary_mv_{m}x{n}_{be}", t,
+             f"speedup_vs_interp={t_int/t:.1f}")
 
     # batched: B independent crossbar instances in one engine call
     B = 8 if quick else 32
@@ -87,12 +124,12 @@ def bench_engine(quick=False):
             xb.run(plan.program)
 
     t_int = _timeit(interp_batch, n=1, warmup=0)
-    print(f"engine/binary_mv_batch{B}_interp,{t_int:.0f},backend=interp")
+    _rec(f"engine/binary_mv_batch{B}_interp", t_int, "backend=interp")
     for be in ("numpy",) + (("jax",) if have_jax() else ()):
         t = _timeit(lambda: plan.execute_batch(mems, backend=be), n=3,
                     warmup=1)
-        print(f"engine/binary_mv_batch{B}_{be},{t:.0f},"
-              f"speedup_vs_interp={t_int/t:.1f}")
+        _rec(f"engine/binary_mv_batch{B}_{be}", t,
+             f"speedup_vs_interp={t_int/t:.1f}")
 
     # tiled scale-out: (M, K) exceeding a single 1024x1024 crossbar
     M, K = (2048, 768) if quick else (4096, 2048)
@@ -102,9 +139,66 @@ def bench_engine(quick=False):
     y, info = tiled_binary_matvec(A, xv)
     us = (time.perf_counter() - t0) * 1e6
     ok = bool(np.array_equal(y, np.where(A @ xv >= 0, 1, -1)))
-    print(f"engine/tiled_binary_mv_{M}x{K},{us:.0f},"
-          f"tiles={info.n_tiles};cycles={info.cycles};"
-          f"reduce_depth={info.reduce_depth};correct={ok}")
+    _rec(f"engine/tiled_binary_mv_{M}x{K}", us,
+         f"tiles={info.n_tiles};cycles={info.cycles};"
+         f"reduce_depth={info.reduce_depth};correct={ok}")
+
+
+def bench_device(quick=False):
+    """Device subsystem: energy/EDP table for all four algorithm plans,
+    Monte-Carlo fault-rate→accuracy curves (raw binary matvec + end-to-end
+    BNN layer), and MIN3-TMR mitigation cost/recovery."""
+    from repro.device import (binary_matvec_sweep, bnn_accuracy_sweep,
+                              energy_table, format_energy_rows, format_sweep,
+                              get_profile, tmr_binary_matvec)
+
+    profile = get_profile(None)
+    t0 = time.perf_counter()
+    rows = energy_table(profile, quick=quick)
+    us = (time.perf_counter() - t0) * 1e6
+    print(format_energy_rows(
+        rows, f"Energy/EDP, profile={profile.name} (all four algorithms)"),
+        file=sys.stderr)
+    for r in rows:
+        _rec(f"device/energy/{r.name}/{r.config.replace(' ', '_')}",
+             float(r.cycles),
+             f"energy_nj={r.energy_nj:.3f};edp_fj_ns={r.edp_fj_ns:.3e};"
+             f"gate_events={r.gate_events};init_cells={r.init_cells}")
+    _rec("device/energy_table_wall", us, f"profile={profile.name}")
+
+    rates = [1e-4, 3e-4, 1e-3, 3e-3, 1e-2]
+    samples = 256 if quick else 1024
+    t0 = time.perf_counter()
+    pts = binary_matvec_sweep(rates, samples=samples)
+    us = (time.perf_counter() - t0) * 1e6
+    print(format_sweep(pts, f"Monte-Carlo binary matvec ({samples} samples "
+                            f"per rate)"), file=sys.stderr)
+    for p in pts:
+        _rec(f"device/mc_bmv/rate_{p.rate:.0e}", p.accuracy,
+             f"ber={p.bit_error_rate:.4f};sign_err={p.sign_error_rate:.4f};"
+             f"samples={p.samples}")
+    _rec("device/mc_bmv_wall", us, f"samples={samples};rates={len(rates)}")
+
+    t0 = time.perf_counter()
+    pts = bnn_accuracy_sweep(rates, n_inputs=samples)
+    us = (time.perf_counter() - t0) * 1e6
+    print(format_sweep(pts, f"Monte-Carlo BNN-layer accuracy ({samples} "
+                            f"inputs per rate)"), file=sys.stderr)
+    for p in pts:
+        _rec(f"device/mc_bnn/rate_{p.rate:.0e}", p.accuracy,
+             f"ber={p.bit_error_rate:.4f};samples={p.samples}")
+    _rec("device/mc_bnn_wall", us, f"samples={samples};rates={len(rates)}")
+
+    t0 = time.perf_counter()
+    r = tmr_binary_matvec(1e-3, samples=128 if quick else 512)
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"TMR @1e-3: err {r.err_raw:.4f} -> {r.err_tmr:.4f}, "
+          f"cycles x{r.cycle_overhead:.2f}, energy x{r.energy_overhead:.2f}",
+          file=sys.stderr)
+    _rec("device/tmr/rate_1e-03", us,
+         f"err_raw={r.err_raw:.4f};err_tmr={r.err_tmr:.4f};"
+         f"cycle_overhead={r.cycle_overhead:.2f};"
+         f"energy_overhead={r.energy_overhead:.2f}")
 
 
 def bench_kernels(quick=False):
@@ -175,10 +269,10 @@ def bench_train_throughput(quick=False):
 
 
 def bench_roofline(quick=False):
-    """Summarize the dry-run roofline JSONs (results/)."""
+    """Summarize the dry-run roofline JSONs (results/, repo-root-relative
+    so reports work from any CWD)."""
     import glob
-    import json
-    files = sorted(glob.glob("results/*.json"))
+    files = sorted(glob.glob(str(RESULTS_DIR / "*.json")))
     if not files:
         print("roofline/none,0,run_dryrun_first=true")
         return
@@ -206,6 +300,7 @@ def main():
         "table1": bench_table1_matvec,
         "table2": bench_table2_conv,
         "engine": bench_engine,
+        "device": bench_device,
         "kernels": bench_kernels,
         "train": bench_train_throughput,
         "roofline": bench_roofline,
@@ -214,7 +309,11 @@ def main():
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
+        _CUR[0] = name
         fn(quick=args.quick)
+        _CUR[0] = None
+        if name in _JSON_BENCHES:
+            _write_bench_json(name, args.quick)
 
 
 if __name__ == "__main__":

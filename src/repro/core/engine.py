@@ -31,6 +31,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+# import-light by design (numpy only) — safe while this module initializes
+from ..device.faults import (FaultModel, as_rng, bernoulli_words,
+                             sample_stuck_words)
 from .compile import (MAX_FANIN, MODE_COL, MODE_INIT, MODE_ROW,
                       CompiledProgram)
 
@@ -82,6 +85,7 @@ class EngineResult:
     cycles: int            # == len(program) by construction
     stats: Dict[str, int]  # interpreter-identical op-category counters
     backend: str
+    faults: Optional[FaultModel] = None  # device model the run was subject to
 
 
 # ---------------------------------------------------------------------------
@@ -178,7 +182,11 @@ def _numpy_plan(cp: CompiledProgram) -> List[tuple]:
     return plan
 
 
-def _run_numpy(cp: CompiledProgram, mem: np.ndarray) -> np.ndarray:
+def _run_numpy(cp: CompiledProgram, mem: np.ndarray,
+               faults: Optional[FaultModel] = None,
+               rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    if faults is not None:
+        return _run_numpy_faulty(cp, mem, faults, rng)
     B = mem.shape[0]
     dtype = _word_dtype(B)
     ones = dtype(np.iinfo(dtype).max)
@@ -211,6 +219,65 @@ def _run_numpy(cp: CompiledProgram, mem: np.ndarray) -> np.ndarray:
         else:
             for c_idx, r_idx, v in inits:
                 buf[np.ix_(c_idx, r_idx)] = ones if v else dtype(0)
+    return _unpack(buf, B, cp.rows, cp.cols)
+
+
+def _run_numpy_faulty(cp: CompiledProgram, mem: np.ndarray,
+                      faults: FaultModel,
+                      rng: Optional[np.random.Generator]) -> np.ndarray:
+    """Trace replay with stochastic device faults as packed word masks.
+
+    Identical replay structure to :func:`_run_numpy` (the ``full`` shortcut
+    is skipped — masked writes give the same result), with three injection
+    points: the stuck-at invariant ``buf = (buf | sa1) & ~sa0`` applied to
+    the initial load and to every written line, a per-gate-evaluation
+    switching-failure mask that retains the old output value, and per-cell
+    init-disturb flips inside bulk-init rectangles. With the ideal model all
+    masks are zero words and the result is bit-identical to the fault-free
+    path (property-tested).
+    """
+    B = mem.shape[0]
+    dtype = _word_dtype(B)
+    ones = dtype(np.iinfo(dtype).max)
+    R, C = cp.rows, cp.cols
+    rng = as_rng(rng)
+    sa0, sa1 = sample_stuck_words(faults, B, R, C, rng, dtype)
+    buf = _pack(mem, dtype)
+    buf = (buf | sa1) & ~sa0                     # cells are stuck from t=0
+    rmasks, cmasks = cp.row_masks, cp.col_masks
+
+    for mode, groups, inits in _numpy_plan(cp):
+        if mode == MODE_COL:
+            for gid, arity, d, ik, s, full in groups:
+                g = buf[ik]                      # (n, arity, R1)
+                out = BIT_GATES[gid][1](*(g[:, k] for k in range(arity)))
+                old = buf[d]
+                new = np.where(rmasks[s], out, old)
+                if faults.p_switch:
+                    fail = bernoulli_words(rng, faults.p_switch,
+                                           (len(d), R + 1), B, dtype)
+                    new = (old & fail) | (new & ~fail)
+                buf[d] = (new | sa1[d]) & ~sa0[d]
+        elif mode == MODE_ROW:
+            for gid, arity, d, ik, s, full in groups:
+                g = buf[:, ik]                   # (C1, n, arity)
+                out = BIT_GATES[gid][1](*(g[:, :, k] for k in range(arity)))
+                old = buf[:, d]
+                new = np.where(cmasks[s].T, out, old)
+                if faults.p_switch:
+                    fail = bernoulli_words(rng, faults.p_switch,
+                                           (C + 1, len(d)), B, dtype)
+                    new = (old & fail) | (new & ~fail)
+                buf[:, d] = (new | sa1[:, d]) & ~sa0[:, d]
+        else:
+            for c_idx, r_idx, v in inits:
+                rect = np.ix_(c_idx, r_idx)
+                blk = np.full((len(c_idx), len(r_idx)),
+                              ones if v else dtype(0), dtype=dtype)
+                if faults.p_init:
+                    blk ^= bernoulli_words(rng, faults.p_init,
+                                           blk.shape, B, dtype)
+                buf[rect] = (blk | sa1[rect]) & ~sa0[rect]
     return _unpack(buf, B, cp.rows, cp.cols)
 
 
@@ -291,7 +358,121 @@ def _build_jax_runner(cp: CompiledProgram):
     return runner
 
 
-def _run_jax(cp: CompiledProgram, mem: np.ndarray) -> np.ndarray:
+def _build_jax_runner_faulty(cp: CompiledProgram):
+    """Fault-injecting variant of :func:`_build_jax_runner`.
+
+    The scan carry is ``(buf, key)``: one PRNG key threads through the whole
+    trace, split once per cycle, so every gate evaluation / init cell draws
+    independent Bernoulli fault words. Stuck-at maps and the two soft-fault
+    probabilities are jit arguments — one compilation serves every fault
+    rate of a sweep.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    R1, C1, W = cp.rows + 1, cp.cols + 1, cp.W
+    dt = jnp.uint32
+    row_masks = jnp.asarray(cp.row_masks)
+    col_masks = jnp.asarray(cp.col_masks)
+    xs = {
+        "mode": jnp.asarray(cp.mode, jnp.int32),
+        "gate": jnp.asarray(cp.gate, jnp.int32),
+        "dst": jnp.asarray(cp.dst),
+        "ins": jnp.asarray(cp.ins),
+        "sel": jnp.asarray(cp.sel),
+        "init_r": jnp.asarray(cp.init_r),
+        "init_c": jnp.asarray(cp.init_c),
+        "init_v": jnp.asarray(cp.init_v),
+    }
+    iota_w = jnp.arange(W)
+    bit_w = jnp.arange(JAX_WORD_BITS, dtype=dt)
+
+    def bern(key, p, shape):
+        # words of Bernoulli(p) bits, one realization per bit-plane slot
+        bits = (jax.random.uniform(key, shape + (JAX_WORD_BITS,)) < p)
+        return jnp.sum(bits.astype(dt) << bit_w, axis=-1, dtype=dt)
+
+    def gate_select(gate_ids, args):
+        stacked = jnp.stack([fn(*args[:ar]) for ar, fn in BIT_GATES])
+        return stacked[gate_ids, iota_w]
+
+    @jax.jit
+    def run(buf0, key, sa0, sa1, p_switch, p_init):
+        def col_step(buf, k, x):
+            g = jnp.take(buf, x["ins"].reshape(-1), axis=0) \
+                .reshape(W, MAX_FANIN, R1)
+            out = gate_select(x["gate"],
+                              tuple(g[:, i] for i in range(MAX_FANIN)))
+            mask = row_masks[x["sel"]]
+            old = jnp.take(buf, x["dst"], axis=0)
+            new = jnp.where(mask, out, old)
+            fail = bern(k, p_switch, (W, R1))
+            new = (old & fail) | (new & ~fail)
+            new = (new | jnp.take(sa1, x["dst"], axis=0)) \
+                & ~jnp.take(sa0, x["dst"], axis=0)
+            return buf.at[x["dst"]].set(new)
+
+        def row_step(buf, k, x):
+            g = jnp.take(buf, x["ins"].reshape(-1), axis=1) \
+                .reshape(C1, W, MAX_FANIN).transpose(1, 2, 0)
+            out = gate_select(x["gate"],
+                              tuple(g[:, i] for i in range(MAX_FANIN)))
+            mask = col_masks[x["sel"]]
+            old = jnp.take(buf, x["dst"], axis=1).T        # (W, C1)
+            new = jnp.where(mask, out, old)
+            fail = bern(k, p_switch, (W, C1))
+            new = (old & fail) | (new & ~fail)
+            new = (new | jnp.take(sa1, x["dst"], axis=1).T) \
+                & ~jnp.take(sa0, x["dst"], axis=1).T
+            return buf.at[:, x["dst"]].set(new.T)
+
+        def init_step(buf, k, x):
+            ks = jax.random.split(k, cp.I)
+            for i in range(cp.I):
+                region = col_masks[x["init_c"][i]][:, None] \
+                    & row_masks[x["init_r"][i]][None, :]
+                word = jnp.where(x["init_v"][i] > 0, dt(0xFFFFFFFF), dt(0))
+                val = word ^ bern(ks[i], p_init, (C1, R1))
+                val = (val | sa1) & ~sa0
+                buf = jnp.where(region, val, buf)
+            return buf
+
+        def step(carry, x):
+            buf, key = carry
+            key, sub = jax.random.split(key)
+            buf = lax.switch(x["mode"], (col_step, row_step, init_step),
+                             buf, sub, x)
+            return (buf, key), None
+
+        (buf, _), _ = lax.scan(step, (buf0, key), xs, unroll=4)
+        return buf
+
+    def runner(mem_np: np.ndarray, faults: FaultModel,
+               rng: np.random.Generator) -> np.ndarray:
+        B = mem_np.shape[0]
+        sa0, sa1 = sample_stuck_words(faults, B, cp.rows, cp.cols, rng,
+                                      np.uint32)
+        buf = _pack(mem_np, np.uint32)
+        buf = (buf | sa1) & ~sa0                 # cells are stuck from t=0
+        key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
+        out = np.asarray(run(jnp.asarray(buf), key, jnp.asarray(sa0),
+                             jnp.asarray(sa1), jnp.float32(faults.p_switch),
+                             jnp.float32(faults.p_init)))
+        return _unpack(out, B, cp.rows, cp.cols)
+
+    return runner
+
+
+def _run_jax(cp: CompiledProgram, mem: np.ndarray,
+             faults: Optional[FaultModel] = None,
+             rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    if faults is not None:
+        runner = cp._caches.get("jax_runner_faulty")
+        if runner is None:
+            runner = cp._caches["jax_runner_faulty"] = \
+                _build_jax_runner_faulty(cp)
+        return runner(mem, faults, as_rng(rng))
     runner = cp._caches.get("jax_runner")
     if runner is None:
         runner = cp._caches["jax_runner"] = _build_jax_runner(cp)
@@ -308,6 +489,8 @@ def execute(
     mem: np.ndarray,
     backend: str = "numpy",
     max_batch: Optional[int] = None,
+    faults: Optional[FaultModel] = None,
+    rng=None,
 ) -> EngineResult:
     """Replay ``cp`` over a batch of crossbars.
 
@@ -316,6 +499,14 @@ def execute(
     for numpy, 32 for jax) — or than ``max_batch`` — are chunked; every chunk
     runs the identical program, so the reported cycle count (the *parallel*
     latency of B independent arrays) is unchanged.
+
+    ``faults`` selects a stochastic device model
+    (:class:`repro.device.faults.FaultModel`); every crossbar in the batch
+    gets an independent fault realization (stuck-at maps, per-gate switching
+    failures, init disturb), seeded from ``rng`` (``None``/seed/Generator).
+    The fault machinery runs even for the ideal all-zero model — bit-identity
+    with ``faults=None`` is a property-tested guarantee, not a shortcut —
+    and never adds cycles: faults perturb state, not schedules.
     """
     squeeze = mem.ndim == 2
     if squeeze:
@@ -335,11 +526,14 @@ def execute(
         raise ValueError(f"unknown engine backend {backend!r}; "
                          f"compiled traces support: ('numpy', 'jax')")
 
+    rng = as_rng(rng) if faults is not None else None
     B = mem.shape[0]
     step = min(word, B) if not max_batch else min(word, max(1, int(max_batch)))
-    chunks = [run(cp, mem[i : i + step]) for i in range(0, B, step)]
+    chunks = [run(cp, mem[i : i + step], faults, rng)
+              if faults is not None else run(cp, mem[i : i + step])
+              for i in range(0, B, step)]
     out = chunks[0] if len(chunks) == 1 else np.concatenate(chunks, axis=0)
     if squeeze:
         out = out[0]
     return EngineResult(mem=out, cycles=cp.n_cycles, stats=dict(cp.stats),
-                        backend=backend)
+                        backend=backend, faults=faults)

@@ -59,6 +59,18 @@ class CrossbarPlan:
     def cycles(self) -> int:
         return len(self.program)
 
+    # -- device models -------------------------------------------------------
+
+    def energy(self, profile=None):
+        """Switching-energy/EDP report for this plan's compiled trace.
+
+        ``profile`` is a :class:`repro.device.energy.DeviceProfile`, a
+        profile name, or ``None`` (VTEAM-like default). Static accounting:
+        derived from the trace's write masks, no execution needed.
+        """
+        from ..device.energy import trace_energy
+        return trace_energy(self.compile(), profile)
+
     # -- execution -----------------------------------------------------------
 
     def new_crossbar(self) -> Crossbar:
@@ -69,20 +81,31 @@ class CrossbarPlan:
         mem: np.ndarray,
         xbar: Optional[Crossbar] = None,
         backend: str = "numpy",
+        faults=None,
+        rng=None,
     ) -> Tuple[np.ndarray, int, Dict[str, int]]:
         """Run this plan's program over one crossbar image ``mem``.
 
         Returns (final mem, cycle count, stats). Passing ``xbar`` forces the
         interpreter path on that crossbar object (legacy API), replacing its
-        memory with ``mem``.
+        memory with ``mem``. ``faults``/``rng`` select a stochastic device
+        model (compiled backends only; see ``engine.execute``).
         """
         if xbar is not None or backend == "interp":
+            self._reject_interp_faults(faults)
             xb = xbar or self.new_crossbar()
             xb.mem[:, :] = mem
             xb.run(self.program)
             return xb.mem, xb.cycles, dict(xb.stats)
-        res = execute(self.compile(), mem, backend=backend)
+        res = execute(self.compile(), mem, backend=backend, faults=faults,
+                      rng=rng)
         return res.mem, res.cycles, res.stats
+
+    @staticmethod
+    def _reject_interp_faults(faults) -> None:
+        if faults is not None and not faults.is_ideal:
+            raise ValueError("fault injection requires a compiled backend "
+                             "('numpy' or 'jax'), not the interpreter")
 
     def run_program(
         self,
@@ -111,13 +134,18 @@ class CrossbarPlan:
         mems: np.ndarray,
         backend: str = "numpy",
         max_batch: Optional[int] = None,
+        faults=None,
+        rng=None,
     ) -> EngineResult:
         """Run this plan's program over ``(B, rows, cols)`` crossbars at once.
 
         ``backend="interp"`` loops the legacy interpreter over the batch
         (slow; useful for equivalence checks of batched/tiled paths).
+        With ``faults``, every crossbar in the batch draws an independent
+        fault realization — the Monte-Carlo axis of ``repro.device``.
         """
         if backend == "interp":
+            self._reject_interp_faults(faults)
             out = np.empty_like(mems)
             xb = self.new_crossbar()
             for b in range(mems.shape[0]):
@@ -129,4 +157,4 @@ class CrossbarPlan:
             return EngineResult(mem=out, cycles=xb.cycles,
                                 stats=dict(xb.stats), backend="interp")
         return execute(self.compile(), mems, backend=backend,
-                       max_batch=max_batch)
+                       max_batch=max_batch, faults=faults, rng=rng)

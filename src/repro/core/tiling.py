@@ -64,13 +64,17 @@ def majority_sign(pop: np.ndarray, n: int) -> np.ndarray:
 
 
 def _execute_tiles(plan, n_tiles: int, load_tile, decode_tile,
-                   backend: str, max_batch: Optional[int]):
+                   backend: str, max_batch: Optional[int],
+                   faults=None, rng=None):
     """Load/execute/decode tiles in bounded-size batches.
 
     Chunking only bounds host memory — every chunk runs the identical
     compiled program, so the reported in-array latency (one program length,
-    all tiles in lockstep) is unchanged.
+    all tiles in lockstep) is unchanged. With ``faults``, every tile draws
+    an independent device-fault realization from the shared ``rng``.
     """
+    if faults is not None:
+        rng = np.random.default_rng(rng)  # one stream across all chunks
     step = max_batch or 64
     results = [None] * n_tiles
     cycles = 0
@@ -79,7 +83,8 @@ def _execute_tiles(plan, n_tiles: int, load_tile, decode_tile,
         mems = np.zeros((e - s, plan.rows, plan.cols), dtype=np.uint8)
         for b in range(s, e):
             load_tile(b, mems[b - s])
-        res = plan.execute_batch(mems, backend=backend)
+        res = plan.execute_batch(mems, backend=backend, faults=faults,
+                                 rng=rng)
         cycles = res.cycles
         for b in range(s, e):
             results[b] = decode_tile(b, res.mem[b - s])
@@ -112,7 +117,7 @@ class TiledMatvec:
                                rows=rows, cols=cols, parts=parts)
 
     def run(self, A: np.ndarray, x: np.ndarray, backend: str = "numpy",
-            max_batch: Optional[int] = None
+            max_batch: Optional[int] = None, faults=None, rng=None
             ) -> Tuple[np.ndarray, TiledResult]:
         M, K, N = self.M, self.K, self.N
         tm, tk, gm, gk = self.tile_m, self.tile_k, self.gm, self.gk
@@ -133,7 +138,7 @@ class TiledMatvec:
         partials, cycles = _execute_tiles(
             plan, gm * gk, load,
             lambda b, mem: plan.decode_y(mem).astype(object),
-            backend, max_batch)
+            backend, max_batch, faults, rng)
 
         W = plan.W  # accumulator width: results exact mod 2^(2N)
         y = np.empty(gm * tm, dtype=object)
@@ -144,12 +149,17 @@ class TiledMatvec:
         return y[:M], TiledResult((gm, gk), gm * gk, cycles, depth, backend)
 
 
+def _run_kw(kw):
+    """Split run-time kwargs (backend/max_batch/faults/rng) from plan kwargs."""
+    return {k: kw.pop(k) for k in ("backend", "max_batch", "faults", "rng")
+            if k in kw}
+
+
 def tiled_matvec(A: np.ndarray, x: np.ndarray, N: int, **kw):
     M, K = A.shape
-    backend = kw.pop("backend", "numpy")
-    max_batch = kw.pop("max_batch", None)
+    run_kw = _run_kw(kw)
     t = TiledMatvec(M, K, N, **kw)
-    return t.run(A, x, backend=backend, max_batch=max_batch)
+    return t.run(A, x, **run_kw)
 
 
 # ---------------------------------------------------------------------------
@@ -175,7 +185,7 @@ class TiledBinaryMatvec:
                                      rows=rows, cols=cols, parts=parts)
 
     def run(self, A: np.ndarray, x: np.ndarray, backend: str = "numpy",
-            max_batch: Optional[int] = None
+            max_batch: Optional[int] = None, faults=None, rng=None
             ) -> Tuple[np.ndarray, TiledResult]:
         M, K = self.M, self.K
         tm, tk, gm, gk = self.tile_m, self.tile_k, self.gm, self.gk
@@ -199,7 +209,7 @@ class TiledBinaryMatvec:
         partials, cycles = _execute_tiles(
             plan, gm * gk, load,
             lambda b, mem: plan.decode_popcount(mem).astype(np.int64),
-            backend, max_batch)
+            backend, max_batch, faults, rng)
 
         pop = np.empty((gm, tm), dtype=np.int64)
         depth = 0
@@ -219,7 +229,8 @@ class TiledBinaryMatvec:
 
     def popcounts_many(self, A: np.ndarray, X: np.ndarray,
                        backend: str = "numpy",
-                       max_batch: Optional[int] = None) -> np.ndarray:
+                       max_batch: Optional[int] = None,
+                       faults=None, rng=None) -> np.ndarray:
         """Popcounts of one A against J vectors: X is (J, K), returns (J, M).
 
         All J · gm · gk (vector, tile) pairs execute as ONE engine batch —
@@ -247,7 +258,7 @@ class TiledBinaryMatvec:
         partials, _ = _execute_tiles(
             plan, J * gm * gk, load,
             lambda b, mem: plan.decode_popcount(mem).astype(np.int64),
-            backend, max_batch)
+            backend, max_batch, faults, rng)
 
         pop = np.empty((J, gm * tm), dtype=np.int64)
         for j in range(J):
@@ -260,10 +271,9 @@ class TiledBinaryMatvec:
 
 def tiled_binary_matvec(A: np.ndarray, x: np.ndarray, **kw):
     M, K = A.shape
-    backend = kw.pop("backend", "numpy")
-    max_batch = kw.pop("max_batch", None)
+    run_kw = _run_kw(kw)
     t = TiledBinaryMatvec(M, K, **kw)
-    return t.run(A, x, backend=backend, max_batch=max_batch)
+    return t.run(A, x, **run_kw)
 
 
 # ---------------------------------------------------------------------------
@@ -293,7 +303,7 @@ class TiledConv2d:
                                  parts=parts, **plan_kw)
 
     def run(self, A: np.ndarray, Kk: np.ndarray, backend: str = "numpy",
-            max_batch: Optional[int] = None
+            max_batch: Optional[int] = None, faults=None, rng=None
             ) -> Tuple[np.ndarray, TiledResult]:
         H, Wd, k = self.H, self.Wd, self.k
         assert A.shape == (H, Wd) and Kk.shape == (k, k)
@@ -314,7 +324,8 @@ class TiledConv2d:
 
         tiles, cycles = _execute_tiles(
             plan, self.gh * self.gw, load,
-            lambda b, mem: plan.decode_out(mem), backend, max_batch)
+            lambda b, mem: plan.decode_out(mem), backend, max_batch,
+            faults, rng)
 
         dtype = np.int64 if self.binary else object
         out = np.zeros((self.gh * self.th_out, self.gw * self.tw_out),
@@ -330,16 +341,14 @@ class TiledConv2d:
 
 def tiled_conv2d(A: np.ndarray, Kk: np.ndarray, N: int, **kw):
     H, Wd = A.shape
-    backend = kw.pop("backend", "numpy")
-    max_batch = kw.pop("max_batch", None)
+    run_kw = _run_kw(kw)
     t = TiledConv2d(H, Wd, Kk.shape[0], N, **kw)
-    return t.run(A, Kk, backend=backend, max_batch=max_batch)
+    return t.run(A, Kk, **run_kw)
 
 
 def tiled_binary_conv2d(A: np.ndarray, Kk: np.ndarray, **kw):
     H, Wd = A.shape
-    backend = kw.pop("backend", "numpy")
-    max_batch = kw.pop("max_batch", None)
+    run_kw = _run_kw(kw)
     kw.setdefault("tile_n", 64)
     t = TiledConv2d(H, Wd, Kk.shape[0], 1, binary=True, **kw)
-    return t.run(A, Kk, backend=backend, max_batch=max_batch)
+    return t.run(A, Kk, **run_kw)

@@ -1,0 +1,48 @@
+"""Device-model subsystem: energy accounting, stochastic fault injection,
+Monte-Carlo reliability sweeps, and in-crossbar mitigation.
+
+MatPIM counts cycles; this package adds the other two axes real mMPU
+viability hinges on — per-gate switching **energy** (priced statically over
+compiled traces) and device **non-idealities** (injected into the vectorized
+executors as packed bit-masks, one independent realization per crossbar in
+a batch). On top of those, :mod:`.montecarlo` turns the engine's bit-plane
+batching into thousands-of-samples reliability sweeps, and :mod:`.mitigation`
+measures in-crossbar TMR (the FELIX MIN3 gate voting over re-executions).
+
+Import structure: :mod:`.energy` and :mod:`.faults` are import-light (numpy
+only) so ``repro.core.engine`` can depend on them without a package cycle;
+:mod:`.montecarlo` and :mod:`.mitigation` import ``repro.core`` and load
+lazily via module ``__getattr__``.
+"""
+from .energy import (DEFAULT_PROFILE, PROFILES, DeviceProfile, EnergyReport,
+                     energy_table, format_energy_rows, get_profile,
+                     trace_energy)
+from .faults import IDEAL, FaultModel
+
+_LAZY = {
+    "binary_matvec_sweep": "montecarlo",
+    "bnn_accuracy_sweep": "montecarlo",
+    "format_sweep": "montecarlo",
+    "SweepPoint": "montecarlo",
+    "tmr_binary_matvec": "mitigation",
+    "TMRReport": "mitigation",
+    "montecarlo": "montecarlo",
+    "mitigation": "mitigation",
+}
+
+__all__ = [
+    "DEFAULT_PROFILE", "DeviceProfile", "EnergyReport", "FaultModel",
+    "IDEAL", "PROFILES", "SweepPoint", "TMRReport", "binary_matvec_sweep",
+    "bnn_accuracy_sweep", "energy_table", "format_energy_rows", "format_sweep",
+    "get_profile", "tmr_binary_matvec", "trace_energy",
+]
+
+
+def __getattr__(name):
+    mod_name = _LAZY.get(name)
+    if mod_name is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    mod = importlib.import_module(f".{mod_name}", __name__)
+    return mod if name == mod_name else getattr(mod, name)

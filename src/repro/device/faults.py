@@ -1,0 +1,120 @@
+"""Stochastic device-fault models for the compiled crossbar executors.
+
+Real memristive arrays are not the ideal switches the interpreter models:
+cells get fabricated (or worn) into permanent stuck-at states, stateful-logic
+gates fail to switch their output device with some per-event probability, and
+bulk SET/RESET pulses disturb a fraction of the cells they drive. This module
+defines those models and the *packed* sampling helpers the executors in
+``repro.core.engine`` use to inject them — faults live in the same bit-plane
+word representation as the memory itself, so one sampled word carries an
+independent fault realization for every crossbar in the batch (up to 64 per
+machine word on the numpy path, 32 on the jax path).
+
+Fault mechanisms (all independent, all per-crossbar-instance):
+
+* **stuck-at-0 / stuck-at-1** — a static per-cell map sampled once per
+  instance; a stuck cell reads its stuck value forever (writes are absorbed).
+  Enforced as the invariant ``buf = (buf | sa1) & ~sa0`` after the initial
+  load and after every write.
+* **switching failure** (``p_switch``) — per *gate evaluation* (one output
+  device in one selected row/column), the output memristor fails to switch
+  and retains its previous state. This is the dominant soft-error mode of
+  MAGIC/FELIX-style stateful logic.
+* **init disturb** (``p_init``) — per cell per bulk-init cycle, the cell ends
+  up flipped relative to the driven value.
+
+This module deliberately imports nothing from ``repro.core`` so the engine
+can import it without a package cycle. The executors own the trace replay;
+this module owns the fault *state* (sampling + packing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Per-mechanism fault probabilities. The default is the ideal device:
+    all zero, and property-tested bit-identical to fault-free execution."""
+
+    p_sa0: float = 0.0     # per-cell stuck-at-0 probability (static map)
+    p_sa1: float = 0.0     # per-cell stuck-at-1 probability (static map)
+    p_switch: float = 0.0  # per gate evaluation: output fails to switch
+    p_init: float = 0.0    # per cell per init cycle: value disturbed (flipped)
+
+    def __post_init__(self):
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{f.name}={v} outside [0, 1]")
+        if self.p_sa0 + self.p_sa1 > 1.0:
+            raise ValueError("p_sa0 + p_sa1 > 1: stuck states are exclusive")
+
+    @property
+    def is_ideal(self) -> bool:
+        return (self.p_sa0 == self.p_sa1 == self.p_switch == self.p_init
+                == 0.0)
+
+    @classmethod
+    def uniform(cls, rate: float) -> "FaultModel":
+        """All four mechanisms at the same ``rate`` — the sweep axis used by
+        the Monte-Carlo fault-rate→accuracy curves."""
+        return cls(p_sa0=rate / 2, p_sa1=rate / 2, p_switch=rate, p_init=rate)
+
+
+IDEAL = FaultModel()
+
+
+def as_rng(rng) -> np.random.Generator:
+    """Normalize ``None`` / seed / Generator into a numpy Generator."""
+    if isinstance(rng, np.random.Generator):
+        return rng
+    return np.random.default_rng(rng)
+
+
+# ---------------------------------------------------------------------------
+# Packed Bernoulli sampling (bit b of each word = crossbar b of the chunk)
+# ---------------------------------------------------------------------------
+
+
+def pack_sample_bits(bits: np.ndarray, dtype) -> np.ndarray:
+    """(B, *shape) {0,1} -> (*shape) words with bit b = sample b."""
+    pb = np.packbits(np.ascontiguousarray(bits, dtype=np.uint8), axis=0,
+                     bitorder="little")
+    w = pb[0].astype(dtype)
+    for g in range(1, pb.shape[0]):
+        w |= pb[g].astype(dtype) << dtype(8 * g)
+    return w
+
+
+def bernoulli_words(rng: np.random.Generator, p: float, shape: Tuple[int, ...],
+                    B: int, dtype) -> np.ndarray:
+    """Words of independent Bernoulli(p) bits: one realization per crossbar
+    in the chunk (bits >= B are sampled too but never unpacked)."""
+    if p <= 0.0:
+        return np.zeros(shape, dtype=dtype)
+    return pack_sample_bits(rng.random((B,) + shape) < p, dtype)
+
+
+def sample_stuck_words(
+    model: FaultModel, B: int, rows: int, cols: int,
+    rng: np.random.Generator, dtype,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Sample per-instance stuck-at maps, packed into executor-buffer shape.
+
+    Returns ``(sa0, sa1)`` of shape ``(cols + 1, rows + 1)`` — the transposed
+    buffer layout of ``engine._pack`` — with the sacrificial extra row/column
+    fault-free (they are simulation artifacts, not physical cells). A cell is
+    stuck-at-0 with ``p_sa0``, stuck-at-1 with ``p_sa1``, exclusively.
+    """
+    sa0 = np.zeros((cols + 1, rows + 1), dtype=dtype)
+    sa1 = np.zeros_like(sa0)
+    if model.p_sa0 > 0.0 or model.p_sa1 > 0.0:
+        u = rng.random((B, rows, cols))
+        sa0[:cols, :rows] = pack_sample_bits(u < model.p_sa0, dtype).T
+        sa1[:cols, :rows] = pack_sample_bits(
+            (u >= model.p_sa0) & (u < model.p_sa0 + model.p_sa1), dtype).T
+    return sa0, sa1

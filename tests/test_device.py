@@ -1,0 +1,261 @@
+"""Device subsystem: energy accounting, fault injection, MC sweeps, TMR.
+
+The load-bearing guarantee is the first block: the default (ideal,
+zero-fault) device model is *bit-identical* to the fault-free executors and
+adds zero cycles, so the device layer can be on by default without
+perturbing the PR 1 compiled-vs-interpreted equivalences.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (BinaryMatvecPlan, MatvecPlan, compile_program,
+                        execute, have_jax)
+from repro.core.compile import GATE_IDS, MODE_COL, MODE_INIT, MODE_ROW
+from repro.core.isa import GATES, ColOp, InitOp
+from repro.device import (DEFAULT_PROFILE, PROFILES, FaultModel,
+                          binary_matvec_sweep, bnn_accuracy_sweep,
+                          energy_table, get_profile, tmr_binary_matvec,
+                          trace_energy)
+from repro.device import energy as energy_mod
+from repro.device.faults import bernoulli_words, sample_stuck_words
+
+BACKENDS = ["numpy"] + (["jax"] if have_jax() else [])
+
+
+def _bmv_plan():
+    return BinaryMatvecPlan(48, 64, rows=64, cols=256, parts=8)
+
+
+def _loaded_mem(plan, seed=0):
+    rng = np.random.default_rng(seed)
+    mem = np.zeros((plan.rows, plan.cols), dtype=np.uint8)
+    plan.load_into(mem, rng.choice([-1, 1], size=(plan.m, plan.n)),
+                   rng.choice([-1, 1], size=plan.n))
+    return mem
+
+
+# -- table consistency (energy.py mirrors the compiler without importing it) --
+
+
+def test_energy_tables_mirror_compiler():
+    assert set(energy_mod.GATE_NAMES) == set(GATE_IDS)
+    for name, gid in GATE_IDS.items():
+        assert energy_mod.GATE_NAMES[gid] == name
+        assert energy_mod.GATE_ARITY[gid] == GATES[name].arity
+    assert (energy_mod.M_COL, energy_mod.M_ROW, energy_mod.M_INIT) == \
+        (MODE_COL, MODE_ROW, MODE_INIT)
+
+
+# -- ideal device model: bit-identical, zero extra cycles ---------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000))
+def test_ideal_model_bit_identical(seed):
+    """faults=FaultModel() must run the full fault machinery and still be
+    bit-identical (memory, cycles, stats) to the fault-free executors."""
+    plan = _bmv_plan()
+    mem0 = _loaded_mem(plan, seed)
+    for backend in BACKENDS:
+        ref = execute(plan.compile(), mem0, backend=backend)
+        res = execute(plan.compile(), mem0, backend=backend,
+                      faults=FaultModel(), rng=seed)
+        np.testing.assert_array_equal(res.mem, ref.mem, err_msg=backend)
+        assert res.cycles == ref.cycles == plan.cycles
+        assert res.stats == ref.stats
+
+
+def test_ideal_model_batched_and_chunked():
+    """Identity holds across word-boundary chunking (B > 64)."""
+    plan = _bmv_plan()
+    rng = np.random.default_rng(3)
+    B = 70
+    mems = np.stack([_loaded_mem(plan, s) for s in range(B)])
+    ref = execute(plan.compile(), mems, backend="numpy")
+    res = execute(plan.compile(), mems, backend="numpy",
+                  faults=FaultModel(), rng=rng)
+    np.testing.assert_array_equal(res.mem, ref.mem)
+
+
+def test_interp_backend_rejects_faults():
+    plan = _bmv_plan()
+    mem0 = _loaded_mem(plan)
+    with pytest.raises(ValueError, match="compiled backend"):
+        plan.execute(mem0, backend="interp", faults=FaultModel.uniform(0.01))
+    # ...but the ideal model is allowed everywhere
+    plan.execute(mem0, backend="interp", faults=FaultModel())
+
+
+# -- deterministic fault mechanisms -------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_stuck_at_extremes(backend):
+    plan = _bmv_plan()
+    mem0 = _loaded_mem(plan)
+    m1, _, _ = plan.execute(mem0, backend=backend,
+                            faults=FaultModel(p_sa1=1.0), rng=0)
+    assert (m1 == 1).all()
+    m0, _, _ = plan.execute(mem0, backend=backend,
+                            faults=FaultModel(p_sa0=1.0), rng=0)
+    assert (m0 == 0).all()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_switch_failure_certain(backend):
+    """p_switch=1: no gate output ever updates — the NOT result stays 0."""
+    prog = [
+        [InitOp(slice(None), [0, 1], 0)],
+        [ColOp("NOT", (0,), 1, None)],
+    ]
+    cp = compile_program(prog, 8, 16, 2, 2)
+    mem0 = np.zeros((8, 16), dtype=np.uint8)
+    ideal = execute(cp, mem0, backend=backend).mem
+    assert (ideal[:, 1] == 1).all()
+    res = execute(cp, mem0, backend=backend,
+                  faults=FaultModel(p_switch=1.0), rng=0)
+    assert (res.mem[:, 1] == 0).all()
+    assert res.cycles == cp.n_cycles
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_init_disturb_certain(backend):
+    """p_init=1: every bulk-init cell lands flipped."""
+    prog = [[InitOp(slice(2, 6), slice(1, 5), 0)]]
+    cp = compile_program(prog, 8, 16, 2, 2)
+    mem0 = np.zeros((8, 16), dtype=np.uint8)
+    res = execute(cp, mem0, backend=backend,
+                  faults=FaultModel(p_init=1.0), rng=0)
+    assert (res.mem[2:6, 1:5] == 1).all()
+    res.mem[2:6, 1:5] = 0
+    assert (res.mem == 0).all()          # nothing outside the rectangle
+
+
+def test_moderate_faults_perturb_but_not_everything():
+    plan = _bmv_plan()
+    mem0 = _loaded_mem(plan)
+    ideal, _, _ = plan.execute(mem0)
+    got, _, _ = plan.execute(mem0, faults=FaultModel.uniform(1e-3), rng=7)
+    frac = (got != ideal).mean()
+    assert 0.0 < frac < 0.5
+
+
+def test_fault_realizations_independent_per_batch_slot():
+    plan = _bmv_plan()
+    mem0 = _loaded_mem(plan)
+    mems = np.broadcast_to(mem0, (8,) + mem0.shape)
+    res = plan.execute_batch(mems, faults=FaultModel.uniform(3e-3), rng=11)
+    # same operands, different draws: slots must not all agree
+    assert any(not np.array_equal(res.mem[0], res.mem[b]) for b in range(1, 8))
+
+
+def test_sampling_helpers():
+    rng = np.random.default_rng(0)
+    w = bernoulli_words(rng, 0.0, (4, 5), 16, np.uint16)
+    assert w.shape == (4, 5) and not w.any()
+    sa0, sa1 = sample_stuck_words(FaultModel(p_sa0=0.5, p_sa1=0.5), 16,
+                                  6, 10, rng, np.uint16)
+    assert not (sa0 & sa1).any()                 # exclusive stuck states
+    assert not sa0[10].any() and not sa0[:, 6].any()   # extras fault-free
+    assert not sa1[10].any() and not sa1[:, 6].any()
+    full = (sa0 | sa1)[:10, :6]
+    assert (full == np.uint16((1 << 16) - 1)).all()    # p0+p1=1 covers all
+
+
+def test_fault_model_validation():
+    with pytest.raises(ValueError):
+        FaultModel(p_switch=1.5)
+    with pytest.raises(ValueError):
+        FaultModel(p_sa0=0.7, p_sa1=0.7)
+
+
+# -- energy accounting --------------------------------------------------------
+
+
+def test_energy_report_structure():
+    plan = _bmv_plan()
+    rep = plan.energy()
+    assert rep.profile == DEFAULT_PROFILE.name
+    assert rep.cycles == plan.cycles
+    assert rep.gate_events > 0 and rep.init_cells > 0
+    assert rep.total_fj == pytest.approx(rep.gate_fj + rep.init_fj)
+    assert rep.edp_fj_ns == pytest.approx(
+        rep.total_fj * rep.cycles * DEFAULT_PROFILE.t_cycle_ns)
+    assert sum(rep.by_gate.values()) == rep.gate_events
+
+
+def test_energy_gate_events_match_interpreter_oracle():
+    """Static gate-event count == sum over executed ops of selected lines,
+    recomputed directly from the uncompiled program."""
+    plan = MatvecPlan(16, 4, 4, 1, rows=64, cols=512, parts=16)
+    rep = plan.energy()
+    events = 0
+    for cyc in plan.program:
+        for op in cyc:
+            if isinstance(op, InitOp):
+                continue
+            if isinstance(op, ColOp):      # row-parallel: one eval per row
+                sel, size = op.rows, plan.rows
+            else:                          # column-parallel: one per column
+                sel, size = op.cols, plan.cols
+            if sel is None:
+                events += size
+            elif isinstance(sel, slice):
+                events += len(range(*sel.indices(size)))
+            else:
+                events += len(np.atleast_1d(sel))
+    assert rep.gate_events == events
+
+
+def test_energy_custom_unregistered_profile():
+    """Reports must work for ad-hoc profiles not present in PROFILES."""
+    from repro.device import DeviceProfile
+
+    custom = DeviceProfile("custom", e_switch_fj=5.0, e_input_fj=0.3,
+                           e_init_fj=1.5, t_cycle_ns=2.0)
+    rep = _bmv_plan().energy(custom)
+    assert rep.profile == "custom"
+    assert rep.latency_ns == rep.cycles * 2.0
+    assert rep.edp_fj_ns > 0
+    assert "custom" in str(rep)
+
+
+def test_energy_profiles_ordered():
+    plan = _bmv_plan()
+    e = {name: plan.energy(name).total_fj for name in PROFILES}
+    assert e["low-energy"] < e["vteam"] < e["vteam-fast"]
+    assert get_profile(None) is DEFAULT_PROFILE
+    assert get_profile("vteam-fast").t_cycle_ns == 1.0
+
+
+def test_energy_table_quick_covers_four_algorithms():
+    rows = energy_table(quick=True)
+    assert [r.name for r in rows] == ["matvec", "binary-mv", "conv",
+                                     "binary-conv"]
+    for r in rows:
+        assert r.cycles > 0 and r.energy_nj > 0 and r.edp_fj_ns > 0
+
+
+# -- Monte-Carlo sweeps + mitigation ------------------------------------------
+
+
+def test_mc_sweep_zero_rate_is_exact():
+    pts = binary_matvec_sweep([0.0, 5e-3], samples=64)
+    assert pts[0].bit_error_rate == 0.0 and pts[0].accuracy == 1.0
+    assert pts[1].bit_error_rate > 0.0
+    assert pts[1].accuracy < 1.0
+
+
+def test_bnn_sweep_zero_rate_is_exact():
+    pts = bnn_accuracy_sweep([0.0, 5e-3], n_inputs=64)
+    assert pts[0].accuracy == 1.0
+    assert pts[1].accuracy < 1.0
+
+
+def test_tmr_recovers_accuracy():
+    r = tmr_binary_matvec(1e-3, samples=96, seed=5)
+    assert r.err_raw > 0.0
+    assert r.err_tmr < r.err_raw            # majority vote must help
+    assert r.cycles_tmr > 3 * r.cycles_raw  # re-execution + vote overhead
+    assert 3.0 < r.energy_overhead < 3.2    # vote is cheap vs 3 replicas

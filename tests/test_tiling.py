@@ -119,6 +119,85 @@ def test_tiled_backend_interp_equivalence():
                                                          ref_binary_mv(A, x))
 
 
+# -- tiling edge cases --------------------------------------------------------
+
+
+def test_tiled_matvec_remainder_tiles():
+    """Non-divisible M and K: last row/col tiles are mostly padding."""
+    rng = np.random.default_rng(20)
+    M, K, N = 65, 17, 8        # tile_m=32 -> 3 row tiles (last 1 row used);
+    A = rng.integers(0, 1 << N, size=(M, K)).astype(np.int64)
+    x = rng.integers(0, 1 << N, size=K).astype(np.int64)
+    y, info = tiled_matvec(A, x, N, tile_m=32, tile_k=8)
+    ref = (A.astype(object) @ x.astype(object)) % (1 << 16)
+    assert np.array_equal(y, ref)
+    assert info.grid == (3, 3) and info.n_tiles == 9
+
+
+def test_tiled_binary_matvec_remainder_tiles():
+    """K not a multiple of tile_k: +1/+1 padding correction must be exact."""
+    rng = np.random.default_rng(21)
+    M, K = 50, 40              # tile_k=32 -> gk=2, 24 padded columns
+    A = rng.choice([-1, 1], size=(M, K))
+    x = rng.choice([-1, 1], size=K)
+    y, info = tiled_binary_matvec(A, x, tile_m=32, tile_k=32)
+    assert np.array_equal(y, ref_binary_mv(A, x))
+    assert info.grid == (2, 2)
+
+
+def test_tiled_1x1_grid_fallback():
+    """Operands that fit one tile: grid (1,1), no host reduction levels."""
+    rng = np.random.default_rng(22)
+    M, K = 30, 32
+    A = rng.choice([-1, 1], size=(M, K))
+    x = rng.choice([-1, 1], size=K)
+    t = TiledBinaryMatvec(M, K, tile_m=32, tile_k=32)
+    y, info = t.run(A, x)
+    assert info.grid == (1, 1) and info.n_tiles == 1
+    assert info.reduce_depth == 0
+    assert np.array_equal(y, ref_binary_mv(A, x))
+
+    M2, K2, N = 16, 4, 8       # full-precision 1x1 fallback
+    A2 = rng.integers(0, 1 << N, size=(M2, K2)).astype(np.int64)
+    x2 = rng.integers(0, 1 << N, size=K2).astype(np.int64)
+    y2, info2 = tiled_matvec(A2, x2, N, tile_m=16, tile_k=4)
+    assert info2.grid == (1, 1) and info2.reduce_depth == 0
+    assert np.array_equal(y2, (A2.astype(object) @ x2.astype(object))
+                          % (1 << 16))
+
+
+def test_tiled_vs_dense_zero_fault_device():
+    """Tiled execution under the ideal (zero-fault) device model is exactly
+    the dense/fault-free result — the device layer can be on by default."""
+    from repro.device import FaultModel
+
+    rng = np.random.default_rng(23)
+    M, K = 96, 64
+    A = rng.choice([-1, 1], size=(M, K))
+    x = rng.choice([-1, 1], size=K)
+    kw = dict(tile_m=64, tile_k=32, rows=64, cols=256, parts=8)
+    y_plain, _ = tiled_binary_matvec(A, x, **kw)
+    y_dev, info = tiled_binary_matvec(A, x, faults=FaultModel(), rng=0, **kw)
+    assert np.array_equal(y_plain, y_dev)
+    assert np.array_equal(y_dev, ref_binary_mv(A, x))
+    assert info.n_tiles > 1
+
+
+def test_tiled_faulty_device_perturbs():
+    """Sanity: a harsh fault model flows through the tiled path and actually
+    perturbs outputs (so the zero-fault test above is not vacuous)."""
+    from repro.device import FaultModel
+
+    rng = np.random.default_rng(24)
+    M, K = 96, 64
+    A = rng.choice([-1, 1], size=(M, K))
+    x = rng.choice([-1, 1], size=K)
+    kw = dict(tile_m=64, tile_k=32, rows=64, cols=256, parts=8)
+    y_bad, _ = tiled_binary_matvec(A, x, faults=FaultModel.uniform(0.05),
+                                   rng=1, **kw)
+    assert not np.array_equal(y_bad, ref_binary_mv(A, x))
+
+
 def test_tiled_conv2d():
     rng = np.random.default_rng(4)
     H, W, k, N = 100, 14, 3, 8
