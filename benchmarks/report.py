@@ -1,4 +1,8 @@
-"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from results/.
+"""Generate the EXPERIMENTS.md summary tables.
+
+Covers the perf-trajectory records (``BENCH_engine/device/apps.json`` at the
+repo root — MISSING files are a hard error, not a silent skip) and the
+§Dry-run / §Roofline tables from ``results/``.
 
     PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
 """
@@ -10,7 +14,13 @@ import sys
 from pathlib import Path
 
 # repo-root-relative so reports work from any CWD
-RESULTS_DIR = Path(__file__).resolve().parent.parent / "results"
+ROOT = Path(__file__).resolve().parent.parent
+RESULTS_DIR = ROOT / "results"
+
+# every bench that benchmarks/run.py persists as BENCH_<name>.json; the
+# report summarizes all of them and FAILS when one is absent (a missing
+# record used to vanish silently, hiding a broken bench from the PR diff)
+BENCH_NAMES = ("engine", "device", "apps")
 
 ARCH_ORDER = ["whisper-tiny", "mamba2-370m", "granite-moe-1b-a400m",
               "arctic-480b", "stablelm-3b", "yi-34b", "olmo-1b",
@@ -104,12 +114,34 @@ def hillclimb_table():
               f"{d['dominant'].replace('_s','')} |")
 
 
+def bench_table():
+    """Summarize the stable-schema BENCH_*.json perf records; exit nonzero
+    when an expected record is missing instead of skipping it silently."""
+    missing = [b for b in BENCH_NAMES
+               if not (ROOT / f"BENCH_{b}.json").exists()]
+    if missing:
+        sys.exit(
+            "benchmarks/report.py: missing perf records: "
+            + ", ".join(f"BENCH_{b}.json" for b in missing)
+            + f" — regenerate with `PYTHONPATH=src python -m benchmarks.run"
+            f" --only <bench>` for: {', '.join(missing)}")
+    print("| bench | quick | metric | value | derived |")
+    print("|---|---|---|---|---|")
+    for b in BENCH_NAMES:
+        d = json.load(open(ROOT / f"BENCH_{b}.json"))
+        for m in d["metrics"]:
+            print(f"| {b} | {d['quick']} | {m['name']} | {m['value']:g} | "
+                  f"{m['derived']} |")
+
+
 def main():
     cells = load()
     n_ok = sum(1 for d in cells.values() if d.get("ok"))
     print(f"<!-- generated by benchmarks/report.py: {len(cells)} cells, "
           f"{n_ok} OK -->\n")
-    print("## §Dry-run\n")
+    print("## §Perf trajectory (BENCH_*.json)\n")
+    bench_table()
+    print("\n## §Dry-run\n")
     dryrun_table(cells)
     print("\n## §Roofline (single-pod 16x16, per-device terms)\n")
     roofline_table(cells)

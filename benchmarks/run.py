@@ -3,9 +3,10 @@ benchmarks + the roofline collector. Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
 
-The ``engine`` and ``device`` benches additionally write stable-schema
-``BENCH_engine.json`` / ``BENCH_device.json`` at the repo root (uploaded as
-a CI artifact) so the perf trajectory is tracked across PRs.
+The ``engine``, ``device`` and ``apps`` benches additionally write
+stable-schema ``BENCH_engine.json`` / ``BENCH_device.json`` /
+``BENCH_apps.json`` at the repo root (uploaded as a CI artifact) so the
+perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -21,7 +22,7 @@ ROOT = Path(__file__).resolve().parent.parent
 RESULTS_DIR = ROOT / "results"      # dryrun/roofline JSONs, CWD-independent
 
 # benches that persist a BENCH_<name>.json perf record at the repo root
-_JSON_BENCHES = ("engine", "device")
+_JSON_BENCHES = ("engine", "device", "apps")
 _RECORDS: dict = {}
 _CUR: list = [None]
 
@@ -201,6 +202,66 @@ def bench_device(quick=False):
          f"energy_overhead={r.energy_overhead:.2f}")
 
 
+def bench_apps(quick=False):
+    """End-to-end application pipelines (repro.apps): multi-layer BNN
+    inference and image-processing chains, per-stage cycles/energy, plus the
+    BNN's Monte-Carlo accuracy-under-faults sweep."""
+    from repro.apps import BinaryMLP, demo_image, edge_pipeline
+    from repro.apps.bnn import fault_sweep
+    from repro.device.montecarlo import format_sweep
+
+    # -- BNN inference -------------------------------------------------------
+    model = BinaryMLP.from_config(n_layers=2 if quick else 3)
+    rng = np.random.default_rng(0)
+    x = rng.choice([-1, 1], size=model.dims[0])
+    t0 = time.perf_counter()
+    y, rep = model.forward(x)
+    us = (time.perf_counter() - t0) * 1e6
+    ok = bool(np.array_equal(y, model.reference(x)[0]))
+    print(rep, file=sys.stderr)
+    for s in rep.stages:
+        _rec(f"apps/bnn/{s.name}", float(s.cycles),
+             f"io_cycles={s.io_cycles};array_nj={s.array_nj:.4f};"
+             f"io_nj={s.io_nj:.5f};tiles={s.n_tiles}")
+    _rec("apps/bnn/total", us,
+         f"cycles={rep.cycles};energy_nj={rep.energy_nj:.4f};"
+         f"latency_ns={rep.latency_ns:.0f};dims={'-'.join(map(str, model.dims))};"
+         f"correct={ok}")
+
+    rates = [1e-4, 3e-4, 1e-3, 3e-3]
+    samples = 128 if quick else 512
+    t0 = time.perf_counter()
+    pts = fault_sweep(model, rates, samples=samples)
+    us = (time.perf_counter() - t0) * 1e6
+    print(format_sweep(pts, f"BNN accuracy under faults ({samples} "
+                            f"samples/rate, {len(model.weights)} layers)"),
+          file=sys.stderr)
+    for p in pts:
+        _rec(f"apps/bnn_faults/rate_{p.rate:.0e}", p.accuracy,
+             f"act_flip={p.bit_error_rate:.4f};samples={p.samples}")
+    _rec("apps/bnn_faults_wall", us, f"samples={samples};rates={len(rates)}")
+
+    # -- imaging chain -------------------------------------------------------
+    from repro.apps.imaging import edge_reference
+
+    img = demo_image(16, 16) if quick else demo_image(24, 24)
+    pipe = edge_pipeline(img.shape, N=8, op="sobel")
+    t0 = time.perf_counter()
+    mag, rep = pipe.run(img)
+    us = (time.perf_counter() - t0) * 1e6
+    ok = bool(np.array_equal(np.asarray(mag, dtype=np.int64),
+                             edge_reference(img, "sobel")))
+    print(rep, file=sys.stderr)
+    for s in rep.stages:
+        _rec(f"apps/imaging/{s.name}", float(s.cycles),
+             f"io_cycles={s.io_cycles};array_nj={s.array_nj:.3f};"
+             f"io_nj={s.io_nj:.5f};tiles={s.n_tiles}")
+    _rec("apps/imaging/total", us,
+         f"cycles={rep.cycles};energy_nj={rep.energy_nj:.3f};"
+         f"latency_ns={rep.latency_ns:.0f};image={img.shape[0]}x{img.shape[1]};"
+         f"correct={ok}")
+
+
 def bench_kernels(quick=False):
     """Pallas kernels (interpret mode on CPU) vs jnp oracles: wall time."""
     import jax.numpy as jnp
@@ -301,6 +362,7 @@ def main():
         "table2": bench_table2_conv,
         "engine": bench_engine,
         "device": bench_device,
+        "apps": bench_apps,
         "kernels": bench_kernels,
         "train": bench_train_throughput,
         "roofline": bench_roofline,

@@ -7,6 +7,7 @@
 3. Run the TPU-adapted Pallas kernels (interpret mode on CPU) against their
    oracles.
 4. Forward one assigned architecture (reduced config).
+5. Compose plans into an end-to-end application pipeline (repro.apps).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -75,3 +76,17 @@ batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)}
 logits, _ = model.forward(params, batch)
 print(f"{cfg.name}: logits {logits.shape}, finite="
       f"{bool(jnp.isfinite(logits.astype(jnp.float32)).all())}")
+
+print()
+print("=" * 70)
+print("5. Application pipeline: 2-layer BNN, every layer in-crossbar")
+print("=" * 70)
+from repro.apps import BinaryMLP
+
+bnn = BinaryMLP.random([64, 64, 16], seed=0)
+xv = rng.choice([-1, 1], size=64)
+yv, report = bnn.forward(xv)
+print(report)
+print(f"matches numpy reference: "
+      f"{bool(np.array_equal(yv, bnn.reference(xv)[0]))}  "
+      f"(see `python -m repro.apps.bnn` / `.imaging` for the full demos)")

@@ -130,7 +130,7 @@ def shapes_for(cfg: ModelConfig):
     out = []
     for s in SHAPES.values():
         if s.name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
-            continue  # full-attention archs skip (see DESIGN.md §5)
+            continue  # full-attention archs skip (see docs/ARCHITECTURE.md §Model stack)
         out.append(s)
     return out
 

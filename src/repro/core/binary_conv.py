@@ -9,7 +9,7 @@ whole-row vertical shifts (amortized across the full row), and every column
 partition processes its resident output columns concurrently — the
 "inner product within a single partition" division of §III-C.
 
-Implementation choices (see DESIGN.md §2):
+Implementation choices (see docs/ALGORITHMS.md §Beyond-paper choices):
 
 * **K-specialized products**: the controller reads the k² kernel bits once
   and emits XNOR(a, K)=a (copy) or NOT(a) directly — no kernel duplication.
@@ -19,6 +19,8 @@ Implementation choices (see DESIGN.md §2):
 * **Tap passes**: per-partition column budget fits ⌈nout_pp/3⌉ counters, so
   the (vert, hori) taps run in up to 3 passes; consecutive passes alternate
   shift-up / shift-down sweeps so no restore pass is needed.
+
+Cycle formula and paper mapping: docs/ALGORITHMS.md §III-C.
 """
 from __future__ import annotations
 
@@ -34,6 +36,15 @@ from .plan import CrossbarPlan
 
 
 class BinaryConvPlan(CrossbarPlan):
+    """±1-kernel conv: out = [XNOR-tap popcount ≥ ⌈k²/2⌉], in ±1.
+
+    >>> plan = BinaryConvPlan(4, 8, 2, rows=64, cols=256, parts=8)
+    >>> A = np.where(np.arange(32).reshape(4, 8) % 2 == 0, 1, -1)
+    >>> out, cycles = plan.run(A, np.ones((2, 2)))
+    >>> sorted(set(out.ravel().tolist()))    # every 2x2 window ties -> +1
+    [1]
+    """
+
     CTR_W = 4  # counter width; k*k <= 9 assumed (3x3); 5x5 uses 5 bits
 
     def __init__(self, m: int, n: int, k: int, rows: int = 1024,

@@ -17,6 +17,8 @@ Column management: every partition runs the *same* program at the same
 per-partition offsets (offset 0 = const-0, 1 = const-1, 2.. = data), so one
 emitted step is P concurrent gates. Dead columns (consumed inputs) are
 recycled through bulk re-init cycles — in-memory register allocation.
+
+Cycle formula and paper mapping: docs/ALGORITHMS.md §II-B.
 """
 from __future__ import annotations
 
@@ -59,6 +61,15 @@ class _OffsetAlloc:
 
 
 class BinaryMatvecPlan(CrossbarPlan):
+    """Partition-tree XNOR-popcount matvec over ±1 operands.
+
+    >>> plan = BinaryMatvecPlan(2, 8, rows=16, cols=64, parts=2)
+    >>> A = np.array([[1] * 8, [-1] * 8])
+    >>> y, pop, cycles = plan.run(A, np.ones(8, dtype=int))
+    >>> [int(v) for v in y], [int(p) for p in pop]
+    ([1, -1], [8, 0])
+    """
+
     def __init__(self, m: int, n: int, rows: int = 1024, cols: int = 1024,
                  parts: int = 32):
         assert m <= rows
@@ -184,7 +195,7 @@ class BinaryMatvecPlan(CrossbarPlan):
         prog += A_.emit_not(total[W - 1], y_off)
         self.y_off = y_off
         self._total_field = total
-        self._W = W
+        self.W = self._W = W  # public: decoded popcount-field width (bits)
         return prog
 
     # -- driver ---------------------------------------------------------------

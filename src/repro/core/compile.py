@@ -143,6 +143,13 @@ def compile_program(
     Raises :class:`SchedulingError` on any cycle the interpreter would have
     rejected (mixed modes, overlapping partition groups, out-of-range cells).
     Empty cycles are skipped, matching ``Crossbar.cycle``.
+
+    >>> from .isa import ColOp, InitOp
+    >>> prog = [[InitOp(slice(None), [0, 1], 0)],
+    ...         [ColOp("NOT", (0,), 1, None)]]
+    >>> cp = compile_program(prog, 8, 8, 1, 1)
+    >>> cp.n_cycles
+    2
     """
     assert rows % row_parts == 0 and cols % col_parts == 0
     rp_size, cp_size = rows // row_parts, cols // col_parts

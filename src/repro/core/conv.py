@@ -20,9 +20,12 @@ convolve simultaneously (identical per-row program); outputs concatenate.
 Kernel storage: K is packed bit-serially into a few dedicated columns
 (``kstore``) inside each band; before each (vert, hori) step the element is
 gathered into a horizontal field and duplicated down the band. With
-``specialize_kernel=True`` (beyond-paper optimization, see DESIGN.md) the
-controller reads K once and emits a K-specialized program: broadcast and
-AND steps of the multiplier vanish.
+``specialize_kernel=True`` (beyond-paper optimization, see
+docs/ALGORITHMS.md §Beyond-paper choices) the controller reads K once and
+emits a K-specialized program: broadcast and AND steps of the multiplier
+vanish.
+
+Cycle formula and paper mapping: docs/ALGORITHMS.md §III-A/B.
 """
 from __future__ import annotations
 
@@ -40,6 +43,15 @@ from .plan import CrossbarPlan
 
 
 class ConvPlan(CrossbarPlan):
+    """Input-parallel balanced full-precision conv (valid correlation).
+
+    >>> plan = ConvPlan(4, 4, 2, 4, rows=64, cols=256, parts=8)
+    >>> out, cycles = plan.run(np.arange(16).reshape(4, 4),
+    ...                        np.array([[1, 0], [0, 1]]))
+    >>> [int(v) for v in out[0]]     # A[r,c] + A[r+1,c+1]
+    [5, 7, 9]
+    """
+
     def __init__(
         self,
         m: int,
@@ -72,7 +84,7 @@ class ConvPlan(CrossbarPlan):
             )
             if alpha is None:
                 # fallback: controller streams K (no in-array kstore) —
-                # frees ceil(k²N/m) columns; see DESIGN.md §2
+                # frees ceil(k²N/m) columns; see docs/ALGORITHMS.md
                 self.stream_kernel = True
                 alpha = next(
                     (a for a in range(1, max_alpha + 1)

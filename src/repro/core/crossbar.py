@@ -78,6 +78,16 @@ def init_rect(mem: np.ndarray, op: InitOp) -> None:
 
 
 class Crossbar:
+    """Per-op reference interpreter (the slow, always-validating baseline the
+    compiled executors in :mod:`.engine` are property-tested against).
+
+    >>> xb = Crossbar(4, 4, 1, 1)
+    >>> xb.load(0, 0, np.array([[1, 0]]))
+    >>> xb.run([[ColOp("NOT", (0,), 2, None)]])      # col 2 := NOT(col 0)
+    >>> int(xb.mem[0, 2]), int(xb.mem[1, 2]), xb.cycles
+    (0, 1, 1)
+    """
+
     def __init__(
         self,
         rows: int = 1024,
@@ -183,13 +193,23 @@ class Crossbar:
 
 
 def encode_uint(values: np.ndarray, nbits: int) -> np.ndarray:
-    """Encode integers as LSB-first bit matrices of shape (..., nbits)."""
+    """Encode integers as LSB-first bit matrices of shape (..., nbits).
+
+    >>> encode_uint(np.array([5]), 4)[0].tolist()
+    [1, 0, 1, 0]
+    """
     values = np.asarray(values, dtype=np.int64)
     shifts = np.arange(nbits, dtype=np.int64)
     return ((values[..., None] >> shifts) & 1).astype(np.uint8)
 
 
 def decode_uint(bits: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`encode_uint` (fields wider than 62 bits decode into
+    exact Python ints).
+
+    >>> int(decode_uint(np.array([1, 0, 1, 0])))
+    5
+    """
     bits = np.asarray(bits, dtype=np.int64)
     nbits = bits.shape[-1]
     if nbits > 62:  # avoid int64 overflow: exact Python-int arithmetic
@@ -200,7 +220,11 @@ def decode_uint(bits: np.ndarray) -> np.ndarray:
 
 
 def decode_int(bits: np.ndarray) -> np.ndarray:
-    """Two's-complement decode (MSB is the sign bit)."""
+    """Two's-complement decode (MSB is the sign bit).
+
+    >>> int(decode_int(np.array([1, 1, 1, 1])))
+    -1
+    """
     u = decode_uint(bits)
     nbits = np.asarray(bits).shape[-1]
     return np.where(u >= (1 << (nbits - 1)), u - (1 << nbits), u)

@@ -93,6 +93,29 @@ def binary_conv_cycles(m: int, n: int, k: int) -> int:
     return BinaryConvPlan(m, n, k).cycles
 
 
+def host_io_cycles(read_cols: int, write_cols: int = 0) -> int:
+    """Crossbar↔host transfer cost of one pipeline-stage boundary, in cycles.
+
+    mMPU peripherals access one *column* per cycle with all rows in parallel
+    (the same row-parallel geometry stateful logic exploits), so moving data
+    across the array boundary costs one cycle per distinct column read plus
+    one per distinct column written, independent of the row count. Tiles in
+    a grid have independent peripheral drivers and transfer concurrently, so
+    callers pass per-tile column counts, not grid totals.
+
+    This is the latency half of the inter-stage data-movement model used by
+    :mod:`repro.apps.pipeline`; the energy half (priced per *cell*, not per
+    column) is :func:`repro.device.energy.io_energy_fj`.
+
+    >>> host_io_cycles(6)        # read back a 6-column accumulator field
+    6
+    >>> host_io_cycles(6, 64)    # ... and write the next stage's operands
+    70
+    """
+    assert read_cols >= 0 and write_cols >= 0
+    return int(read_cols) + int(write_cols)
+
+
 def serialized_cycles(program) -> int:
     """Latency with partition parallelism disabled — the naive baseline
     analog for algorithms whose speedup comes from concurrent partitions.

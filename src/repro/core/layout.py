@@ -112,7 +112,7 @@ def duplicate_band(src_row: int, band: Tuple[int, int], rp_size: int, cols=None)
         cycles(m) ≈ (min(m, rp) - 1) + rp * ceil(log2(m / rp))
 
     This is cheaper than the O(m) serial duplication in MatPIM's latency
-    expressions; see DESIGN.md §2 (Fidelity note).
+    expressions; see docs/ALGORITHMS.md (Fidelity note).
     """
     lo, hi = band
     assert src_row == lo

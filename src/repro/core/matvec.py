@@ -13,6 +13,8 @@ n ≤ ~8 for N=32 in a 1024-wide array) is overcome by block decomposition:
   reduction (MatPIM Fig. 2(b)).
 
 The baseline of [MultPIM, FloatPIM] is exactly the α=1 case.
+
+Cycle formula and paper mapping: docs/ALGORITHMS.md §II-A.
 """
 from __future__ import annotations
 
@@ -30,7 +32,14 @@ from .plan import CrossbarPlan
 
 
 class MatvecPlan(CrossbarPlan):
-    """Layout + program for one (m, n, N, α) balanced matvec."""
+    """Layout + program for one (m, n, N, α) balanced matvec.
+
+    >>> plan = MatvecPlan(4, 2, 4, alpha=1, rows=64, cols=256, parts=8)
+    >>> A = np.array([[1, 2], [3, 4], [5, 6], [7, 8]])
+    >>> y, cycles = plan.run(A, np.array([2, 3]))
+    >>> [int(v) for v in y]          # exact mod 2^(2N)
+    [8, 18, 28, 38]
+    """
 
     def __init__(
         self,

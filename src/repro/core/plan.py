@@ -33,7 +33,20 @@ from .engine import EngineResult, execute
 
 class CrossbarPlan:
     """Mixin/base: subclasses set ``rows``, ``cols``, ``parts`` and
-    ``self.program`` (a list of cycles) before calling the methods here."""
+    ``self.program`` (a list of cycles) before calling the methods here.
+
+    The compile→execute flow shared by all four algorithm plans:
+
+    >>> from repro.core import BinaryMatvecPlan
+    >>> plan = BinaryMatvecPlan(2, 8, rows=16, cols=64, parts=2)
+    >>> mem = np.zeros((16, 64), dtype=np.uint8)
+    >>> plan.load_into(mem, np.ones((2, 8)), np.ones(8))
+    >>> out, cycles, stats = plan.execute(mem)       # compiled numpy backend
+    >>> cycles == plan.cycles == plan.compile().n_cycles
+    True
+    >>> plan.energy().cycles == cycles               # static trace pricing
+    True
+    """
 
     rows: int
     cols: int

@@ -43,8 +43,31 @@ class TiledResult:
     backend: str
 
 
+class _TiledEnergyMixin:
+    """Shared device-model hooks for the tiled wrappers.
+
+    The grid runs ONE compiled program on every tile, so the per-tile trace
+    energy is a single static pricing pass and the grid total is a multiply —
+    the hook :mod:`repro.apps.pipeline` uses to charge each stage.
+    """
+
+    @property
+    def n_tiles(self) -> int:
+        return self.gm * self.gk
+
+    def energy(self, profile=None):
+        """Per-tile :class:`~repro.device.energy.EnergyReport` (grid total =
+        ``report.total_fj * self.n_tiles``)."""
+        return self.plan.energy(profile)
+
+
 def tree_reduce(parts: List[np.ndarray]) -> Tuple[np.ndarray, int]:
-    """Pairwise binary-tree reduction; returns (sum, depth)."""
+    """Pairwise binary-tree reduction; returns (sum, depth).
+
+    >>> total, depth = tree_reduce([np.array([i]) for i in range(7)])
+    >>> int(total[0]), depth
+    (21, 3)
+    """
     depth = 0
     while len(parts) > 1:
         parts = [parts[i] + parts[i + 1] if i + 1 < len(parts) else parts[i]
@@ -59,6 +82,9 @@ def majority_sign(pop: np.ndarray, n: int) -> np.ndarray:
     Ties (dot exactly 0, even n) break to +1, matching the in-array plan's
     ``pop >= n/2`` threshold. Works for odd n too — ``pop >= n // 2`` would
     misclassify dot = −1 as +1 there.
+
+    >>> majority_sign(np.array([0, 2, 3, 4]), 4)   # dots -4, 0, 2, 4
+    array([-1,  1,  1,  1])
     """
     return np.where(2 * pop - n >= 0, 1, -1)
 
@@ -104,7 +130,7 @@ def max_matvec_block(N: int, cols: int = 1024, parts: int = 32) -> int:
 # ---------------------------------------------------------------------------
 
 
-class TiledMatvec:
+class TiledMatvec(_TiledEnergyMixin):
     def __init__(self, M: int, K: int, N: int, tile_m: Optional[int] = None,
                  tile_k: Optional[int] = None, rows: int = 1024,
                  cols: int = 1024, parts: int = 32):
@@ -167,7 +193,7 @@ def tiled_matvec(A: np.ndarray, x: np.ndarray, N: int, **kw):
 # ---------------------------------------------------------------------------
 
 
-class TiledBinaryMatvec:
+class TiledBinaryMatvec(_TiledEnergyMixin):
     def __init__(self, M: int, K: int, tile_m: Optional[int] = None,
                  tile_k: Optional[int] = None, rows: int = 1024,
                  cols: int = 1024, parts: int = 32):
@@ -270,6 +296,14 @@ class TiledBinaryMatvec:
 
 
 def tiled_binary_matvec(A: np.ndarray, x: np.ndarray, **kw):
+    """One-shot tiled ±1 matvec (see :class:`TiledBinaryMatvec`).
+
+    >>> y, info = tiled_binary_matvec(np.ones((4, 64), dtype=int),
+    ...                               np.ones(64, dtype=int),
+    ...                               tile_k=32, rows=64, cols=256, parts=8)
+    >>> [int(v) for v in y], info.n_tiles, info.reduce_depth
+    ([1, 1, 1, 1], 2, 1)
+    """
     M, K = A.shape
     run_kw = _run_kw(kw)
     t = TiledBinaryMatvec(M, K, **kw)
@@ -283,6 +317,8 @@ def tiled_binary_matvec(A: np.ndarray, x: np.ndarray, **kw):
 
 
 class TiledConv2d:
+    # defines its own n_tiles/energy (gh×gw grid, kernel-specialized
+    # programs) rather than inheriting _TiledEnergyMixin's gm×gk versions
     def __init__(self, H: int, Wd: int, k: int, N: int, tile_m: int = 64,
                  tile_n: int = 8, binary: bool = False, rows: int = 1024,
                  cols: int = 1024, parts: int = 32, **plan_kw):
@@ -301,6 +337,17 @@ class TiledConv2d:
         else:
             self.plan = ConvPlan(tile_m, tile_n, k, N, rows=rows, cols=cols,
                                  parts=parts, **plan_kw)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.gh * self.gw
+
+    def energy(self, profile=None, K: Optional[np.ndarray] = None):
+        """Per-tile trace energy; conv programs specialize on the kernel, so
+        pass ``K`` (or run once) before pricing."""
+        if K is not None:
+            self.plan.ensure_program(K)
+        return self.plan.energy(profile)
 
     def run(self, A: np.ndarray, Kk: np.ndarray, backend: str = "numpy",
             max_batch: Optional[int] = None, faults=None, rng=None

@@ -16,7 +16,7 @@ lazily via module ``__getattr__``.
 """
 from .energy import (DEFAULT_PROFILE, PROFILES, DeviceProfile, EnergyReport,
                      energy_table, format_energy_rows, get_profile,
-                     trace_energy)
+                     io_energy_fj, trace_energy)
 from .faults import IDEAL, FaultModel
 
 _LAZY = {
@@ -34,7 +34,7 @@ __all__ = [
     "DEFAULT_PROFILE", "DeviceProfile", "EnergyReport", "FaultModel",
     "IDEAL", "PROFILES", "SweepPoint", "TMRReport", "binary_matvec_sweep",
     "bnn_accuracy_sweep", "energy_table", "format_energy_rows", "format_sweep",
-    "get_profile", "tmr_binary_matvec", "trace_energy",
+    "get_profile", "io_energy_fj", "tmr_binary_matvec", "trace_energy",
 ]
 
 

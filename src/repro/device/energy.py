@@ -84,6 +84,11 @@ DEFAULT_PROFILE = PROFILES["vteam"]
 
 
 def get_profile(profile) -> DeviceProfile:
+    """Normalize ``None`` / name / :class:`DeviceProfile` into a profile.
+
+    >>> get_profile(None).name, get_profile("low-energy").t_cycle_ns
+    ('vteam', 10.0)
+    """
     if profile is None:
         return DEFAULT_PROFILE
     if isinstance(profile, DeviceProfile):
@@ -168,6 +173,23 @@ def trace_energy(cp, profile=None) -> EnergyReport:
                  if by_gate_arr[g]},
         t_cycle_ns=prof.t_cycle_ns,
     )
+
+
+def io_energy_fj(read_cells: int, write_cells: int, profile=None) -> float:
+    """Energy of one crossbar↔host transfer, in fJ.
+
+    The energy half of the inter-stage data-movement model used by
+    :mod:`repro.apps.pipeline` (the latency half is
+    :func:`repro.core.latency.host_io_cycles`). Reads are half-select/sense
+    events (``e_input_fj`` per cell); writes are driven SET/RESET events
+    (``e_init_fj`` per cell). Unlike the cycle cost — one cycle per *column*,
+    rows in parallel — energy is paid per **cell** moved.
+
+    >>> round(io_energy_fj(100, 50), 2)    # vteam: 100*0.4 + 50*1.8
+    130.0
+    """
+    prof = get_profile(profile)
+    return read_cells * prof.e_input_fj + write_cells * prof.e_init_fj
 
 
 # ---------------------------------------------------------------------------

@@ -55,13 +55,22 @@ class FaultModel:
 
     @property
     def is_ideal(self) -> bool:
+        """True for the all-zero (default) model.
+
+        >>> FaultModel().is_ideal, FaultModel(p_switch=1e-3).is_ideal
+        (True, False)
+        """
         return (self.p_sa0 == self.p_sa1 == self.p_switch == self.p_init
                 == 0.0)
 
     @classmethod
     def uniform(cls, rate: float) -> "FaultModel":
         """All four mechanisms at the same ``rate`` — the sweep axis used by
-        the Monte-Carlo fault-rate→accuracy curves."""
+        the Monte-Carlo fault-rate→accuracy curves.
+
+        >>> FaultModel.uniform(1e-3).p_switch
+        0.001
+        """
         return cls(p_sa0=rate / 2, p_sa1=rate / 2, p_switch=rate, p_init=rate)
 
 

@@ -77,7 +77,11 @@ def tmr_binary_matvec(
     ``faults`` defaults to :meth:`FaultModel.uniform` at ``rate``. Every
     sample gets three spatially-independent replica executions (separate
     arrays, separate stuck-at maps — see module docstring) plus one
-    (faulty) in-crossbar MIN3 vote.
+    (faulty) in-crossbar MIN3 vote. Example::
+
+        r = tmr_binary_matvec(1e-3, samples=512)
+        r.err_raw, r.err_tmr            # e.g. 0.108 -> 0.048
+        r.cycle_overhead                # ~3.01x (vote is 3 cycles)
     """
     plan = plan or BinaryMatvecPlan(48, 64, rows=64, cols=256, parts=8)
     model = faults if faults is not None else FaultModel.uniform(rate)

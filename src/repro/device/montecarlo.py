@@ -52,7 +52,10 @@ def binary_matvec_sweep(
     """BER / sign-error of one binary matvec vs uniform fault rate.
 
     All ``samples`` replicas carry the same operands; each replica draws an
-    independent :meth:`FaultModel.uniform` realization.
+    independent :meth:`FaultModel.uniform` realization. Example::
+
+        pts = binary_matvec_sweep([1e-4, 1e-3], samples=256)
+        print(format_sweep(pts, "binary matvec"))   # rate/BER/accuracy rows
     """
     plan = plan or _default_plan()
     rng = np.random.default_rng(seed)

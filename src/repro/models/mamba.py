@@ -7,7 +7,7 @@ O(1)-state decode step. Pure JAX, follows the minimal-mamba2 formulation.
 Chunked algorithm: intra-chunk quadratic attention-like term + inter-chunk
 state recurrence (lax.scan over chunks). MatPIM applicability note: the
 state scan is not a matvec-with-reduction shape, so the paper's technique
-does not apply here (DESIGN.md §5); in/out projections still shard (TP).
+does not apply here (docs/ARCHITECTURE.md §Model stack); in/out projections still shard (TP).
 """
 from __future__ import annotations
 

@@ -1,0 +1,152 @@
+"""Application pipelines (repro.apps): end-to-end correctness + cost reports."""
+import numpy as np
+import pytest
+
+from repro.apps.bnn import BinaryMLP, fault_sweep
+from repro.apps.imaging import (BINARY_KERNELS, KERNELS, binary_edge_pipeline,
+                                demo_image, edge_pipeline, edge_reference,
+                                ref_correlate, sharpen_pipeline)
+from repro.apps.pipeline import (BinaryMatvecStage, HostStage, Pipeline,
+                                 decode_signed)
+from repro.core import have_jax
+from repro.device import FaultModel
+
+SMALL_KW = dict(rows=64, cols=256, parts=8)
+
+
+def small_mlp(dims=(32, 32, 16), seed=0):
+    return BinaryMLP.random(dims, seed=seed, plan_kw=SMALL_KW)
+
+
+# -- BNN ---------------------------------------------------------------------
+
+
+def test_bnn_forward_matches_reference():
+    model = small_mlp()
+    rng = np.random.default_rng(1)
+    x = rng.choice([-1, 1], size=model.dims[0])
+    y, rep = model.forward(x)
+    ref_y, ref_dots = model.reference(x)
+    assert np.array_equal(y, ref_y)
+    assert np.array_equal(model.scores, ref_dots)
+    # report invariants: every layer ran its full compiled program
+    assert [s.cycles for s in rep.stages] == \
+        [st.tiled.plan.cycles for st in model.stages]
+    assert all(s.io_cycles > 0 and s.array_nj > 0 for s in rep.stages)
+    assert rep.cycles == sum(s.total_cycles for s in rep.stages)
+
+
+@pytest.mark.skipif(not have_jax(), reason="jax not available")
+def test_bnn_forward_jax_bit_identical():
+    model = small_mlp()
+    rng = np.random.default_rng(2)
+    x = rng.choice([-1, 1], size=model.dims[0])
+    y_np, _ = model.forward(x, backend="numpy")
+    s_np = model.scores
+    y_jax, _ = model.forward(x, backend="jax")
+    assert np.array_equal(y_np, y_jax)
+    assert np.array_equal(s_np, model.scores)
+
+
+def test_bnn_batch_forward_matches_reference():
+    model = small_mlp()
+    rng = np.random.default_rng(3)
+    X = rng.choice([-1, 1], size=(5, model.dims[0]))
+    dots, acts = model.forward_batch(X)
+    for j in range(X.shape[0]):
+        _, ref_dots = model.reference(X[j])
+        assert np.array_equal(dots[j], ref_dots)
+    assert len(acts) == len(model.weights) - 1
+
+
+def test_bnn_multi_tile_layer_reduces_on_host():
+    """A layer whose K exceeds one tile exercises the tree reduction."""
+    model = BinaryMLP.random((64, 8), seed=4,
+                             plan_kw=dict(rows=64, cols=256, parts=8,
+                                          tile_k=32))
+    st = model.stages[0]
+    assert st.tiled.gk == 2
+    x = np.random.default_rng(5).choice([-1, 1], size=64)
+    y, rep = model.forward(x)
+    assert np.array_equal(y, model.reference(x)[0])
+    assert rep.stages[0].reduce_depth == 1
+    assert rep.stages[0].n_tiles == 2
+
+
+def test_bnn_fault_sweep_zero_rate_is_exact():
+    model = small_mlp()
+    pts = fault_sweep(model, [0.0, 3e-2], samples=24)
+    assert pts[0].accuracy == 1.0 and pts[0].bit_error_rate == 0.0
+    assert pts[1].bit_error_rate > 0.0
+    assert 0.0 <= pts[1].accuracy <= 1.0
+
+
+def test_pipeline_ideal_fault_model_matches_fault_free():
+    model = small_mlp()
+    x = np.random.default_rng(6).choice([-1, 1], size=model.dims[0])
+    y0, _ = model.forward(x)
+    y1, _ = model.forward(x, faults=FaultModel(), rng=0)
+    assert np.array_equal(y0, y1)
+
+
+# -- imaging -----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ["sobel", "roberts"])
+def test_edge_pipeline_matches_host_reference(op):
+    img = demo_image(12, 12, seed=0)
+    pipe = edge_pipeline(img.shape, N=8, op=op)
+    mag, rep = pipe.run(img)
+    assert np.array_equal(np.asarray(mag, dtype=np.int64),
+                          edge_reference(img, op))
+    # blur stage + parallel gradient stage, both on the crossbar
+    assert [s.kind for s in rep.stages] == ["conv", "parallel"]
+    assert rep.energy_nj > 0 and rep.latency_ns > 0
+
+
+def test_sharpen_pipeline_matches_host_reference():
+    img = demo_image(10, 10, seed=1)
+    sharp, _ = sharpen_pipeline(img.shape).run(img)
+    want = np.clip(ref_correlate(img, KERNELS["sharpen"]), 0, 15)
+    assert np.array_equal(np.asarray(sharp, dtype=np.int64), want)
+
+
+def test_binary_edge_pipeline_matches_host_reference():
+    img = demo_image(12, 12, seed=2)
+    edges, rep = binary_edge_pipeline(img.shape).run(img)
+    b = np.where(img > 7, 1, -1)
+    want = np.maximum(
+        np.where(ref_correlate(b, BINARY_KERNELS["edge_v"]) >= 0, 1, -1),
+        np.where(ref_correlate(b, BINARY_KERNELS["edge_h"]) >= 0, 1, -1))
+    assert np.array_equal(edges, want)
+    assert rep.stages[0].kind == "host" and rep.stages[0].total_nj == 0.0
+
+
+def test_imaging_chain_under_faults_still_runs():
+    img = demo_image(10, 10)
+    pipe = edge_pipeline(img.shape, N=8, op="roberts", blur=False)
+    mag, _ = pipe.run(img, faults=FaultModel.uniform(1e-3), rng=0)
+    assert mag.shape == (9, 9)
+
+
+# -- helpers -----------------------------------------------------------------
+
+
+def test_decode_signed():
+    out = decode_signed(np.array([0, 1, 127, 128, 255], dtype=object), 8)
+    assert list(out) == [0, 1, 127, -128, -1]
+
+
+def test_host_stage_is_free():
+    st = HostStage(lambda v: v * 2, name="x2")
+    y, rep = st.run(np.arange(4))
+    assert list(y) == [0, 2, 4, 6]
+    assert rep.total_cycles == 0 and rep.total_nj == 0.0
+
+
+def test_pipeline_report_format_mentions_stages():
+    model = small_mlp(dims=(16, 8))
+    x = np.ones(16, dtype=np.int64)
+    _, rep = model.forward(x)
+    text = str(rep)
+    assert "layer0_8x16" in text and "nJ" in text

@@ -3,7 +3,7 @@
 These pin our cycle counts (they are deterministic program lengths) and
 check the paper's *claims*: dimension flexibility, latency scaling, and the
 binary speedups. Published numbers are compared with a documented tolerance
-(the reference per-primitive gate counts are not public; see DESIGN.md §2).
+(the reference per-primitive gate counts are not public; see docs/ALGORITHMS.md).
 """
 import pytest
 
