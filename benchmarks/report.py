@@ -1,8 +1,10 @@
 """Generate the EXPERIMENTS.md summary tables.
 
 Covers the perf-trajectory records (``BENCH_engine/device/apps.json`` at the
-repo root — MISSING files are a hard error, not a silent skip) and the
-§Dry-run / §Roofline tables from ``results/``.
+repo root — MISSING files are a hard error, not a silent skip), a per-metric
+delta table against the previous committed run (``git show HEAD:BENCH_*``)
+that flags >20% wall-time regressions, and the §Dry-run / §Roofline tables
+from ``results/``.
 
     PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
 """
@@ -10,6 +12,7 @@ from __future__ import annotations
 
 import glob
 import json
+import subprocess
 import sys
 from pathlib import Path
 
@@ -134,6 +137,88 @@ def bench_table():
                   f"{m['derived']} |")
 
 
+def _is_walltime_metric(name: str) -> bool:
+    """Metrics measured in wall microseconds (bigger = slower = worse).
+    Everything else (cycles, accuracy, energy) is deterministic or
+    higher-is-better and only gets a 'changed' note, not a regression flag.
+    """
+    return (name.startswith("engine/") or name.endswith("_wall")
+            or name.endswith("/total"))
+
+
+REGRESSION_PCT = 20.0
+
+
+def bench_delta_table() -> list:
+    """Per-metric deltas vs the previous committed BENCH_*.json.
+
+    The previous run is whatever ``git show HEAD:BENCH_<b>.json`` holds, so
+    in a PR the comparison is against the branch's base state. Returns the
+    list of WARNING strings (also printed) so callers/tests can assert on
+    them; wall-time metrics regressing by more than ``REGRESSION_PCT``
+    percent are flagged.
+    """
+    print("\n### Perf deltas vs previous committed run\n")
+    warnings = []
+    printed_header = False
+    for b in BENCH_NAMES:
+        cur_p = ROOT / f"BENCH_{b}.json"
+        if not cur_p.exists():
+            continue
+        cur = json.load(open(cur_p))
+        try:
+            prev = json.loads(subprocess.run(
+                ["git", "show", f"HEAD:BENCH_{b}.json"], cwd=ROOT,
+                capture_output=True, text=True, check=True).stdout)
+        except (subprocess.CalledProcessError, FileNotFoundError,
+                json.JSONDecodeError):
+            print(f"(no previous BENCH_{b}.json at git HEAD — baseline run)")
+            continue
+        if cur.get("quick") != prev.get("quick"):
+            print(f"(BENCH_{b}.json quick={cur.get('quick')} vs previous "
+                  f"quick={prev.get('quick')} — values not comparable, "
+                  f"skipping deltas)")
+            continue
+        if not printed_header:
+            print("| bench | metric | previous | current | delta |")
+            print("|---|---|---|---|---|")
+            printed_header = True
+        prev_m = {m["name"]: m["value"] for m in prev["metrics"]}
+        cur_names = {m["name"] for m in cur["metrics"]}
+        for name, pv in prev_m.items():
+            if name not in cur_names:
+                # a vanished metric is exactly the silent drift this table
+                # exists to catch
+                print(f"| {b} | {name} | {pv:g} | — | REMOVED |")
+                warnings.append(
+                    f"WARNING: {name} present in previous BENCH_{b}.json but "
+                    f"missing from the current run")
+        for m in cur["metrics"]:
+            pv = prev_m.get(m["name"])
+            if pv is None:
+                print(f"| {b} | {m['name']} | — | {m['value']:g} | NEW |")
+                continue
+            delta = (m["value"] - pv) / pv * 100 if pv else 0.0
+            print(f"| {b} | {m['name']} | {pv:g} | {m['value']:g} | "
+                  f"{delta:+.1f}% |")
+            if _is_walltime_metric(m["name"]) and delta > REGRESSION_PCT:
+                warnings.append(
+                    f"WARNING: {m['name']} regressed {delta:+.1f}% "
+                    f"({pv:g} -> {m['value']:g} us)")
+            elif (not _is_walltime_metric(m["name"])
+                  and abs(delta) > 0.1):
+                warnings.append(
+                    f"NOTE: {m['name']} changed {delta:+.1f}% "
+                    f"(deterministic metric — expected only with an "
+                    f"intentional model change)")
+    for w in warnings:
+        print(w)
+    if printed_header and not warnings:
+        print("\nno regressions above "
+              f"{REGRESSION_PCT:.0f}% and no deterministic-metric drift")
+    return warnings
+
+
 def main():
     cells = load()
     n_ok = sum(1 for d in cells.values() if d.get("ok"))
@@ -141,6 +226,7 @@ def main():
           f"{n_ok} OK -->\n")
     print("## §Perf trajectory (BENCH_*.json)\n")
     bench_table()
+    bench_delta_table()
     print("\n## §Dry-run\n")
     dryrun_table(cells)
     print("\n## §Roofline (single-pod 16x16, per-device terms)\n")

@@ -15,10 +15,12 @@ Public API:
 from .binary_conv import BinaryConvPlan, matpim_binary_conv2d
 from .binary_matvec import (BinaryMatvecPlan, NaiveBinaryMatvecPlan,
                             matpim_binary_matvec)
-from .compile import CompiledProgram, compile_program
+from .compile import (CompiledProgram, FusedSchedule, Segment,
+                      compile_program, fuse_program)
 from .conv import ConvPlan, matpim_conv2d
 from .crossbar import Crossbar, SchedulingError, decode_uint, encode_uint
-from .engine import EngineResult, available_backends, execute, have_jax
+from .engine import (EngineResult, available_backends, execute, have_jax,
+                     parse_backend)
 from .matvec import MatvecPlan, matpim_matvec
 from .plan import CrossbarPlan
 from .tiling import (TiledBinaryMatvec, TiledConv2d, TiledMatvec, TiledResult,
@@ -27,11 +29,12 @@ from .tiling import (TiledBinaryMatvec, TiledConv2d, TiledMatvec, TiledResult,
 
 __all__ = [
     "BinaryConvPlan", "BinaryMatvecPlan", "CompiledProgram", "ConvPlan",
-    "Crossbar", "CrossbarPlan", "EngineResult", "MatvecPlan",
-    "NaiveBinaryMatvecPlan", "SchedulingError", "TiledBinaryMatvec",
-    "TiledConv2d", "TiledMatvec", "TiledResult", "available_backends",
-    "compile_program", "decode_uint", "encode_uint", "execute", "have_jax",
-    "matpim_binary_conv2d", "matpim_binary_matvec", "matpim_conv2d",
-    "matpim_matvec", "tiled_binary_conv2d", "tiled_binary_matvec",
+    "Crossbar", "CrossbarPlan", "EngineResult", "FusedSchedule",
+    "MatvecPlan", "NaiveBinaryMatvecPlan", "SchedulingError", "Segment",
+    "TiledBinaryMatvec", "TiledConv2d", "TiledMatvec", "TiledResult",
+    "available_backends", "compile_program", "decode_uint", "encode_uint",
+    "execute", "fuse_program", "have_jax", "matpim_binary_conv2d",
+    "matpim_binary_matvec", "matpim_conv2d", "matpim_matvec",
+    "parse_backend", "tiled_binary_conv2d", "tiled_binary_matvec",
     "tiled_conv2d", "tiled_matvec",
 ]

@@ -29,6 +29,21 @@ Scheduling/partition validation — the physical co-schedulability the latency
 claims rest on — runs ONCE here, instead of on every interpreted ``run()``.
 The compiled trace also carries the exact cycle count and op-category stats,
 bit-identical to what the interpreter would have accumulated.
+
+Macro-op fusion
+---------------
+:func:`fuse_program` further groups the cycle trace into **macro-op
+segments**: runs of same-mode cycles whose gather indices, gate ids and write
+masks are precomputed into dense padded arrays — a static schedule in the
+spirit of HIPE-MAGIC's ahead-of-time gate grouping. Segments let the
+executors in ``engine.py``/``fused.py`` replay the trace without per-cycle
+dispatch: the jax backend lowers each segment to a mode-specialized
+``lax.scan`` over fixed-size cycle chunks (no ``lax.switch`` anywhere), and
+the numpy backend replays each segment's *independent spans* (consecutive
+cycles with no data dependence) as single batched gather/eval/scatter calls.
+Fusion is a simulator-speed optimization only: ``FusedSchedule.n_cycles``
+always equals the unfused trace length, and final memory is bit-identical
+(the cross-backend conformance suite enforces both).
 """
 from __future__ import annotations
 
@@ -99,6 +114,10 @@ class CompiledProgram:
     ``nops`` holds the real per-cycle count so ragged executors can skip the
     padding) and init cycles to ``I`` rectangles. Padding ops carry the
     all-False mask id 0 and write the sacrificial extra column/row.
+
+    ``schedule`` (attached by :func:`fuse_program`, on by default) is the
+    macro-op segment view of the same trace; executors use it when present
+    and fall back to per-cycle replay when it is ``None``.
     """
 
     rows: int
@@ -118,6 +137,7 @@ class CompiledProgram:
     row_masks: np.ndarray      # (nR, rows+1) bool
     col_masks: np.ndarray      # (nC, cols+1) bool
     stats: Dict[str, int]      # interpreter-identical op-category counters
+    schedule: Optional["FusedSchedule"] = None
 
     def __post_init__(self):
         self._caches: Dict[object, object] = {}  # executor-private memoization
@@ -130,6 +150,192 @@ class CompiledProgram:
                                self.init_v, self.row_masks, self.col_masks))
 
 
+# ---------------------------------------------------------------------------
+# Macro-op fusion: the static segment schedule
+# ---------------------------------------------------------------------------
+
+# sub-split a same-mode run at a width-class change only when both sides keep
+# at least this many cycles (prevents fragmentation on alternating widths)
+SPLIT_MIN = 32
+
+
+@dataclasses.dataclass
+class Segment:
+    """One macro-op segment: ``[t0, t1)`` same-mode cycles, ops re-sorted by
+    gate id (stable, so within-gate op order is preserved) and padded to this
+    segment's own width ``W`` — typically far narrower than the trace-global
+    padding, which is what makes segment replay cheap.
+
+    ``spans`` lists within-segment cycle ranges ``[a, b)`` (relative to
+    ``t0``) that are *mutually independent*: no cycle in the span reads or
+    rewrites a line written earlier in the span, so the whole span can
+    execute as one batched gather → gate-eval → masked-scatter (reads all
+    happen against pre-span memory, exactly like the interpreter's
+    within-cycle snapshot semantics). ``perm`` maps each sorted op slot back
+    to its original compile slot so per-op fault masks stay aligned.
+    """
+
+    mode: int
+    t0: int
+    t1: int
+    W: int
+    nops: np.ndarray     # (L,)       int32
+    gate: np.ndarray     # (L, W)     int8   sorted by gate id per cycle
+    dst: np.ndarray      # (L, W)     int32
+    ins: np.ndarray      # (L, W, 5)  int32
+    sel: np.ndarray      # (L, W)     int32
+    perm: np.ndarray     # (L, W)     int32  original slot of sorted slot
+    spans: List[Tuple[int, int]]
+
+    @property
+    def length(self) -> int:
+        return self.t1 - self.t0
+
+
+@dataclasses.dataclass
+class FusedSchedule:
+    """Macro-op segment view of a compiled trace.
+
+    Purely a simulator-speed artifact: cycle accounting is untouched
+    (``n_cycles`` equals the unfused trace length by construction — asserted
+    here and cross-checked by ``latency.compiled_cycles``), and replaying
+    segments is bit-identical to per-cycle replay.
+    """
+
+    segments: List[Segment]
+    n_cycles: int
+
+    def __post_init__(self):
+        assert self.n_cycles == sum(s.length for s in self.segments)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def n_spans(self) -> int:
+        return sum(len(s.spans) for s in self.segments)
+
+    def summary(self) -> Dict[str, int]:
+        """Compact shape record (used by the golden-trace fixtures)."""
+        return {
+            "n_segments": self.n_segments,
+            "n_spans": self.n_spans,
+            "n_cycles": self.n_cycles,
+            "max_W": max((s.W for s in self.segments), default=0),
+        }
+
+
+def _mode_runs(cp: CompiledProgram) -> List[Tuple[int, int, int]]:
+    """(mode, t0, t1) maximal same-mode runs, sub-split at width-class
+    boundaries when both sides keep >= SPLIT_MIN cycles."""
+    runs: List[Tuple[int, int, int]] = []
+    T = cp.n_cycles
+    t = 0
+    while t < T:
+        m = int(cp.mode[t])
+        t1 = t
+        while t1 < T and int(cp.mode[t1]) == m:
+            t1 += 1
+        bounds = [t]
+        if m != MODE_INIT:
+            def wclass(x):
+                return (max(1, int(cp.nops[x])) - 1).bit_length()
+            for u in range(t + 1, t1):
+                if (wclass(u) != wclass(u - 1) and u - bounds[-1] >= SPLIT_MIN
+                        and t1 - u >= SPLIT_MIN):
+                    bounds.append(u)
+        bounds.append(t1)
+        for a, b in zip(bounds, bounds[1:]):
+            runs.append((m, a, b))
+        t = t1
+    return runs
+
+
+def _independent_spans(cp: CompiledProgram, t0: int, t1: int) -> List[Tuple[int, int]]:
+    """Greedy split of ``[t0, t1)`` into maximal prefixes of mutually
+    independent cycles (line-granular, conservative).
+
+    A cycle joins the open span unless one of its ops reads a line written
+    earlier in the span (RAW) or writes a line already written (WAW — the
+    batched scatter applies at most one masked write per line). Writes to a
+    line the span only *read* so far (WAR) are safe: span execution gathers
+    all inputs against pre-span memory first, so earlier cycles still see the
+    old value — the same snapshot rule the interpreter applies within one
+    cycle. Init cycles always span alone (rectangles overlap freely).
+    """
+    if int(cp.mode[t0]) == MODE_INIT:
+        return [(a, a + 1) for a in range(t1 - t0)]
+    spans: List[Tuple[int, int]] = []
+    a = t0
+    written: set = set()
+    read: set = set()
+    for t in range(t0, t1):
+        n = int(cp.nops[t])
+        t_ins = {int(v) for v in cp.ins[t, :n].reshape(-1)}
+        t_dst = {int(v) for v in cp.dst[t, :n]}
+        if t > a and (t_ins & written or t_dst & written):
+            spans.append((a - t0, t - t0))
+            a, written, read = t, set(), set()
+        written |= t_dst
+        read |= t_ins
+    spans.append((a - t0, t1 - t0))
+    return spans
+
+
+def fuse_program(cp: CompiledProgram) -> FusedSchedule:
+    """Group ``cp``'s cycles into macro-op :class:`Segment`\\ s.
+
+    Deterministic (stable sorts only) and cheap — O(trace size) numpy work —
+    so it runs by default at compile time. The schedule is attached to
+    ``cp.schedule`` by :func:`compile_program`; executors may also call this
+    directly for a trace compiled with ``fuse=False``.
+
+    >>> from .isa import ColOp, InitOp
+    >>> prog = [[InitOp(slice(None), [0, 1], 0)],
+    ...         [ColOp("NOT", (0,), 1, None)],
+    ...         [ColOp("NOT", (2,), 3, None)]]
+    >>> sched = compile_program(prog, 8, 8, 1, 1).schedule
+    >>> sched.n_cycles, sched.n_segments
+    (3, 2)
+    >>> sched.segments[1].spans      # both NOTs touch disjoint lines
+    [(0, 2)]
+    """
+    segments: List[Segment] = []
+    for m, t0, t1 in _mode_runs(cp):
+        L = t1 - t0
+        if m == MODE_INIT:
+            W = 1
+            nops = np.zeros(L, np.int32)
+            gate = np.zeros((L, W), np.int8)
+            dst = np.zeros((L, W), np.int32)
+            ins = np.zeros((L, W, MAX_FANIN), np.int32)
+            sel = np.zeros((L, W), np.int32)
+            perm = np.zeros((L, W), np.int32)
+        else:
+            W = max(1, int(cp.nops[t0:t1].max()))
+            pad_cell = cp.rows if m == MODE_ROW else cp.cols
+            nops = np.asarray(cp.nops[t0:t1], np.int32).copy()
+            gate = np.zeros((L, W), np.int8)
+            dst = np.full((L, W), pad_cell, np.int32)
+            ins = np.full((L, W, MAX_FANIN), pad_cell, np.int32)
+            sel = np.zeros((L, W), np.int32)
+            perm = np.zeros((L, W), np.int32)
+            for j, t in enumerate(range(t0, t1)):
+                n = int(cp.nops[t])
+                order = np.argsort(cp.gate[t, :n], kind="stable")
+                gate[j, :n] = cp.gate[t, order]
+                dst[j, :n] = cp.dst[t, order]
+                ins[j, :n] = cp.ins[t, order]
+                sel[j, :n] = cp.sel[t, order]
+                perm[j, :n] = order
+        segments.append(Segment(
+            mode=m, t0=t0, t1=t1, W=W, nops=nops, gate=gate, dst=dst,
+            ins=ins, sel=sel, perm=perm,
+            spans=_independent_spans(cp, t0, t1)))
+    return FusedSchedule(segments=segments, n_cycles=cp.n_cycles)
+
+
 def compile_program(
     program: Sequence[Sequence[object]],
     rows: int,
@@ -137,19 +343,22 @@ def compile_program(
     row_parts: int = 32,
     col_parts: int = 32,
     validate: bool = True,
+    fuse: bool = True,
 ) -> CompiledProgram:
     """Lower ``program`` into a :class:`CompiledProgram` for (rows, cols).
 
     Raises :class:`SchedulingError` on any cycle the interpreter would have
     rejected (mixed modes, overlapping partition groups, out-of-range cells).
-    Empty cycles are skipped, matching ``Crossbar.cycle``.
+    Empty cycles are skipped, matching ``Crossbar.cycle``. ``fuse=True``
+    (default) additionally attaches the macro-op :class:`FusedSchedule`
+    (:func:`fuse_program`) that the fast executor paths replay.
 
     >>> from .isa import ColOp, InitOp
     >>> prog = [[InitOp(slice(None), [0, 1], 0)],
     ...         [ColOp("NOT", (0,), 1, None)]]
     >>> cp = compile_program(prog, 8, 8, 1, 1)
-    >>> cp.n_cycles
-    2
+    >>> cp.n_cycles, cp.schedule.n_segments
+    (2, 2)
     """
     assert rows % row_parts == 0 and cols % col_parts == 0
     rp_size, cp_size = rows // row_parts, cols // col_parts
@@ -238,9 +447,12 @@ def compile_program(
             init_c[t, i] = cs
             init_v[t, i] = v
 
-    return CompiledProgram(
+    cp = CompiledProgram(
         rows=rows, cols=cols, n_cycles=T, W=W, I=I,
         mode=mode, nops=nops, gate=gate, dst=dst, ins=ins, sel=sel,
         init_r=init_r, init_c=init_c, init_v=init_v,
         row_masks=row_pool.stack(), col_masks=col_pool.stack(), stats=stats,
     )
+    if fuse:
+        cp.schedule = fuse_program(cp)
+    return cp

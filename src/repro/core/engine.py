@@ -1,13 +1,23 @@
 """Vectorized batched executors for compiled crossbar traces.
 
-Two interchangeable backends replay a :class:`~repro.core.compile.CompiledProgram`
-over a batch of B independent crossbars:
+Two backend families replay a :class:`~repro.core.compile.CompiledProgram`
+over a batch of B independent crossbars, each in a fused (macro-op segment)
+and an unfused (per-cycle) variant:
 
-* ``numpy`` — a Python loop over cycles; within a cycle everything is a few
-  dense gather / boolean-word / masked-scatter array ops.
-* ``jax``   — the whole trace folded through ``jax.lax.scan`` with a
-  ``lax.switch`` per cycle mode, jitted once per (program, batch) and fused
-  end-to-end. Gated: raises cleanly when jax is absent.
+* ``numpy`` — fused by default: segments replay as batched fancy-indexing
+  over independent cycle spans (``fused.run_numpy_fused``). The unfused
+  variant (``numpy-unfused``) is the legacy Python loop over cycles.
+* ``jax`` — fused by default for segment-friendly traces: one jitted
+  function per (program, word dtype) with mode-specialized per-segment
+  ``lax.scan`` chunks and **no** per-cycle ``lax.switch``
+  (``fused.build_jax_fused``). The unfused variant folds the whole trace
+  through a per-cycle ``lax.scan`` + ``lax.switch`` — kept as the fallback
+  for heavily mode-interleaved traces and for ``FaultModel`` injection.
+  Gated: raises cleanly when jax is absent.
+
+``backend`` accepts ``"numpy"``/``"jax"`` (auto: fused when the compiled
+trace carries a schedule) plus the explicit variants ``"numpy-fused"``,
+``"numpy-unfused"``, ``"jax-fused"``, ``"jax-unfused"``.
 
 Bit-plane packing
 -----------------
@@ -17,11 +27,12 @@ short boolean expression on words (``BIT_GATES``), so one gather + a couple of
 bitwise ops simulate the gate across up to 64 crossbars at once — this is
 where the >=10x over the interpreter comes from, and what makes the tiled
 multi-crossbar scale-out (``tiling.py``) cheap. Batches wider than the word
-are chunked transparently.
+are chunked transparently; the jax word dtype shrinks to fit the batch
+(uint8 for B<=8), quartering single-instance simulation traffic.
 
-Both backends are bit-identical to the interpreter (``Crossbar.run``) in
+All backends are bit-identical to the interpreter (``Crossbar.run``) in
 final memory state, cycle count, and op-category stats — property-tested in
-``tests/test_compile_engine.py``.
+``tests/test_compile_engine.py`` and ``tests/test_conformance.py``.
 """
 from __future__ import annotations
 
@@ -32,8 +43,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 # import-light by design (numpy only) — safe while this module initializes
-from ..device.faults import (FaultModel, as_rng, bernoulli_words,
-                             sample_stuck_words)
+from ..device.faults import (FaultModel, FaultRealization, as_rng,
+                             make_fault_source, sample_stuck_words)
 from .compile import (MAX_FANIN, MODE_COL, MODE_INIT, MODE_ROW,
                       CompiledProgram)
 
@@ -74,9 +85,31 @@ def have_jax() -> bool:
 
 
 def available_backends() -> tuple:
-    """Backends ``execute`` accepts for compiled traces. ``CrossbarPlan``
+    """Backends ``execute`` accepts for compiled traces (auto variants; the
+    explicit ``-fused``/``-unfused`` forms are accepted too). ``CrossbarPlan``
     methods additionally accept ``"interp"`` (the uncompiled interpreter)."""
     return ("numpy", "jax") if have_jax() else ("numpy",)
+
+
+def parse_backend(backend: str) -> tuple:
+    """``backend`` → ``(base, variant)`` with base in {numpy, jax} and
+    variant in {auto, fused, unfused}.
+
+    >>> parse_backend("numpy"), parse_backend("jax-fused")
+    (('numpy', 'auto'), ('jax', 'fused'))
+    """
+    base, variant = backend, "auto"
+    if backend.endswith("-fused"):
+        base, variant = backend[:-len("-fused")], "fused"
+    elif backend.endswith("-unfused"):
+        base, variant = backend[:-len("-unfused")], "unfused"
+    if base not in ("numpy", "jax"):
+        # "interp" is a plan-level backend (CrossbarPlan.execute/_batch):
+        # a compiled trace alone cannot be interpreted
+        raise ValueError(
+            f"unknown engine backend {backend!r}; compiled traces support "
+            f"'numpy' and 'jax' plus '-fused'/'-unfused' variants")
+    return base, variant
 
 
 @dataclasses.dataclass
@@ -85,7 +118,7 @@ class EngineResult:
     cycles: int            # == len(program) by construction
     stats: Dict[str, int]  # interpreter-identical op-category counters
     backend: str
-    faults: Optional[FaultModel] = None  # device model the run was subject to
+    faults: object = None  # FaultModel / FaultRealization the run was under
 
 
 # ---------------------------------------------------------------------------
@@ -104,28 +137,60 @@ _LITTLE = __import__("sys").byteorder == "little"
 
 
 def _pack(mem: np.ndarray, dtype) -> np.ndarray:
-    """(B, R, C) uint8 -> (C+1, R+1) words, bit b = crossbar b."""
+    """(B, R, C) uint8 -> (C+1, R+1) words, bit b = crossbar b.
+
+    Byte-plane construction: bits are OR-accumulated into uint8 planes (one
+    per word byte) and the planes reinterpreted as the word dtype, so the
+    only wide operation is a single word-matrix transpose at the end. At
+    B == 1 the word simply *is* the cell value. This keeps host-side packing
+    far below trace-replay cost (the generic ``np.packbits(axis=0)`` path it
+    replaces dominated whole-engine wall time at large batches).
+    """
     B, R, C = mem.shape
-    pb = np.packbits(mem, axis=0, bitorder="little")   # (ceil(B/8), R, C)
-    word = pb[0].astype(dtype)
-    for g in range(1, pb.shape[0]):
-        word |= pb[g].astype(dtype) << dtype(8 * g)
+    dtype = np.dtype(dtype)
     buf = np.zeros((C + 1, R + 1), dtype=dtype)
+    if B == 1:
+        buf[:C, :R] = mem[0].T
+        return buf
+    if not _LITTLE:                                   # pragma: no cover
+        pb = np.packbits(mem, axis=0, bitorder="little")
+        word = pb[0].astype(dtype)
+        for g in range(1, pb.shape[0]):
+            word |= pb[g].astype(dtype) << dtype(8 * g)
+        buf[:C, :R] = word.T
+        return buf
+    planes = np.zeros((R, C, dtype.itemsize), np.uint8)
+    for g in range((B + 7) // 8):
+        p = planes[:, :, g]
+        for k in range(min(8, B - 8 * g)):
+            p |= mem[8 * g + k] << np.uint8(k)
+    word = planes.reshape(R, C * dtype.itemsize).view(dtype)  # (R, C)
     buf[:C, :R] = word.T
     return buf
 
 
 def _unpack(buf: np.ndarray, B: int, R: int, C: int) -> np.ndarray:
-    nbytes = buf.dtype.itemsize
-    w = np.ascontiguousarray(buf[:C, :R])
-    if _LITTLE:
-        u8 = w.view(np.uint8).reshape(C, R, nbytes)
-        bits = np.unpackbits(u8, axis=2, bitorder="little")  # (C, R, 8*nbytes)
-        return np.ascontiguousarray(bits[:, :, :B].transpose(2, 1, 0))
-    mem = np.empty((B, R, C), dtype=np.uint8)
-    for b in range(B):
-        mem[b] = ((w >> buf.dtype.type(b)) & 1).astype(np.uint8).T
-    return mem
+    """Inverse of :func:`_pack`: (C+1, R+1) words -> (B, R, C) uint8.
+
+    One word-matrix transpose up front, then contiguous per-bit shifts out
+    of uint8 byte planes (no ``np.unpackbits`` round-trip through an
+    8x-inflated bit tensor, no strided (B, R, C) transpose copy).
+    """
+    if B == 1:
+        return np.ascontiguousarray(
+            (buf[:C, :R] & buf.dtype.type(1)).astype(np.uint8).T)[None]
+    wT = np.ascontiguousarray(buf[:C, :R].T)          # (R, C) words
+    out = np.empty((B, R, C), dtype=np.uint8)
+    if not _LITTLE:                                   # pragma: no cover
+        for b in range(B):
+            out[b] = (wT >> buf.dtype.type(b)).astype(np.uint8) & 1
+        return out
+    u8 = wT.view(np.uint8).reshape(R, C, buf.dtype.itemsize)
+    for g in range((B + 7) // 8):
+        plane = np.ascontiguousarray(u8[:, :, g])
+        for k in range(min(8, B - 8 * g)):
+            out[8 * g + k] = (plane >> np.uint8(k)) & np.uint8(1)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -168,7 +233,7 @@ def _numpy_plan(cp: CompiledProgram) -> List[tuple]:
                 full = all(int(s) in full_ids for s in sel)
                 groups.append((int(gid), arity, cp.dst[t, w],
                                np.ascontiguousarray(cp.ins[t, w, :arity]),
-                               sel, full))
+                               sel, full, t, w))
         inits = []
         if mode == MODE_INIT:
             for i in range(cp.I):
@@ -176,7 +241,7 @@ def _numpy_plan(cp: CompiledProgram) -> List[tuple]:
                 cm = cp.col_masks[cp.init_c[t, i]]
                 if rm.any() and cm.any():
                     inits.append((np.nonzero(cm)[0], np.nonzero(rm)[0],
-                                  int(cp.init_v[t, i])))
+                                  int(cp.init_v[t, i]), t, i))
         plan.append((mode, groups, inits))
     cp._caches["numpy_plan"] = plan
     return plan
@@ -197,7 +262,7 @@ def _run_numpy(cp: CompiledProgram, mem: np.ndarray,
 
     for mode, groups, inits in plan:
         if mode == MODE_COL:
-            for gid, arity, d, ik, s, full in groups:
+            for gid, arity, d, ik, s, full, t, w in groups:
                 g = buf[ik]                      # (n, arity, R1)
                 out = BIT_GATES[gid][1](*(g[:, k] for k in range(arity)))
                 if full:
@@ -208,7 +273,7 @@ def _run_numpy(cp: CompiledProgram, mem: np.ndarray,
                     m = rmasks[s]                # (n, R1)
                     buf[d] = np.where(m, out, buf[d])
         elif mode == MODE_ROW:
-            for gid, arity, d, ik, s, full in groups:
+            for gid, arity, d, ik, s, full, t, w in groups:
                 g = buf[:, ik]                   # (C1, n, arity)
                 out = BIT_GATES[gid][1](*(g[:, :, k] for k in range(arity)))
                 if full:
@@ -217,66 +282,66 @@ def _run_numpy(cp: CompiledProgram, mem: np.ndarray,
                     m = cmasks[s].T              # (C1, n)
                     buf[:, d] = np.where(m, out, buf[:, d])
         else:
-            for c_idx, r_idx, v in inits:
+            for c_idx, r_idx, v, t, i in inits:
                 buf[np.ix_(c_idx, r_idx)] = ones if v else dtype(0)
     return _unpack(buf, B, cp.rows, cp.cols)
 
 
 def _run_numpy_faulty(cp: CompiledProgram, mem: np.ndarray,
-                      faults: FaultModel,
+                      faults,
                       rng: Optional[np.random.Generator]) -> np.ndarray:
-    """Trace replay with stochastic device faults as packed word masks.
+    """Trace replay with device faults as packed word masks.
 
     Identical replay structure to :func:`_run_numpy` (the ``full`` shortcut
     is skipped — masked writes give the same result), with three injection
     points: the stuck-at invariant ``buf = (buf | sa1) & ~sa0`` applied to
     the initial load and to every written line, a per-gate-evaluation
     switching-failure mask that retains the old output value, and per-cell
-    init-disturb flips inside bulk-init rectangles. With the ideal model all
-    masks are zero words and the result is bit-identical to the fault-free
-    path (property-tested).
+    init-disturb flips inside bulk-init rectangles. ``faults`` is a
+    :class:`FaultModel` (masks drawn here, in cycle-then-gate order) or a
+    :class:`FaultRealization` (masks precomputed per cycle). With the ideal
+    model all masks are zero words and the result is bit-identical to the
+    fault-free path (property-tested).
     """
     B = mem.shape[0]
     dtype = _word_dtype(B)
     ones = dtype(np.iinfo(dtype).max)
     R, C = cp.rows, cp.cols
-    rng = as_rng(rng)
-    sa0, sa1 = sample_stuck_words(faults, B, R, C, rng, dtype)
+    src = make_fault_source(faults, rng, B, R, C, dtype)
+    sa0, sa1 = src.stuck()
     buf = _pack(mem, dtype)
     buf = (buf | sa1) & ~sa0                     # cells are stuck from t=0
     rmasks, cmasks = cp.row_masks, cp.col_masks
 
     for mode, groups, inits in _numpy_plan(cp):
         if mode == MODE_COL:
-            for gid, arity, d, ik, s, full in groups:
+            for gid, arity, d, ik, s, full, t, w in groups:
                 g = buf[ik]                      # (n, arity, R1)
                 out = BIT_GATES[gid][1](*(g[:, k] for k in range(arity)))
                 old = buf[d]
                 new = np.where(rmasks[s], out, old)
-                if faults.p_switch:
-                    fail = bernoulli_words(rng, faults.p_switch,
-                                           (len(d), R + 1), B, dtype)
+                if src.has_switch:
+                    fail = src.switch_col(t, w, len(d))
                     new = (old & fail) | (new & ~fail)
                 buf[d] = (new | sa1[d]) & ~sa0[d]
         elif mode == MODE_ROW:
-            for gid, arity, d, ik, s, full in groups:
+            for gid, arity, d, ik, s, full, t, w in groups:
                 g = buf[:, ik]                   # (C1, n, arity)
                 out = BIT_GATES[gid][1](*(g[:, :, k] for k in range(arity)))
                 old = buf[:, d]
                 new = np.where(cmasks[s].T, out, old)
-                if faults.p_switch:
-                    fail = bernoulli_words(rng, faults.p_switch,
-                                           (C + 1, len(d)), B, dtype)
+                if src.has_switch:
+                    fail = src.switch_row(t, w, len(d))
                     new = (old & fail) | (new & ~fail)
                 buf[:, d] = (new | sa1[:, d]) & ~sa0[:, d]
         else:
-            for c_idx, r_idx, v in inits:
+            for c_idx, r_idx, v, t, i in inits:
                 rect = np.ix_(c_idx, r_idx)
                 blk = np.full((len(c_idx), len(r_idx)),
                               ones if v else dtype(0), dtype=dtype)
-                if faults.p_init:
-                    blk ^= bernoulli_words(rng, faults.p_init,
-                                           blk.shape, B, dtype)
+                flip = src.init_flip(t, i, c_idx, r_idx)
+                if flip is not None:
+                    blk ^= flip
                 buf[rect] = (blk | sa1[rect]) & ~sa0[rect]
     return _unpack(buf, B, cp.rows, cp.cols)
 
@@ -489,7 +554,7 @@ def execute(
     mem: np.ndarray,
     backend: str = "numpy",
     max_batch: Optional[int] = None,
-    faults: Optional[FaultModel] = None,
+    faults=None,
     rng=None,
 ) -> EngineResult:
     """Replay ``cp`` over a batch of crossbars.
@@ -500,38 +565,89 @@ def execute(
     runs the identical program, so the reported cycle count (the *parallel*
     latency of B independent arrays) is unchanged.
 
-    ``faults`` selects a stochastic device model
-    (:class:`repro.device.faults.FaultModel`); every crossbar in the batch
-    gets an independent fault realization (stuck-at maps, per-gate switching
-    failures, init disturb), seeded from ``rng`` (``None``/seed/Generator).
-    The fault machinery runs even for the ideal all-zero model — bit-identity
-    with ``faults=None`` is a property-tested guarantee, not a shortcut —
-    and never adds cycles: faults perturb state, not schedules.
+    ``backend`` selects the executor: ``"numpy"``/``"jax"`` use the fused
+    macro-op schedule when ``cp`` carries one (the compile default) and fall
+    back to per-cycle replay otherwise; ``"numpy-fused"``/``"jax-fused"``
+    require fusion (attaching a schedule on demand), and
+    ``"numpy-unfused"``/``"jax-unfused"`` force the legacy per-cycle paths.
+    The auto jax backend also falls back to the unfused scan for heavily
+    mode-interleaved traces (see ``fused.JAX_FUSE_MAX_SEGMENTS``) — fused
+    lowering is always *correct*, but jit time grows with segment count.
+
+    ``faults`` selects a device model: a
+    :class:`repro.device.faults.FaultModel` (each crossbar draws an
+    independent realization — stuck-at maps, per-gate switching failures,
+    init disturb — seeded from ``rng``: ``None``/seed/Generator) or an
+    explicit :class:`repro.device.faults.FaultRealization` whose per-cycle
+    masks replay bit-identically on every backend that accepts them.
+    Support matrix: numpy paths take both; the jax auto path serves a
+    ``FaultModel`` through the unfused PRNG-threaded scan (unchanged
+    behavior) and a ``FaultRealization`` through the fused runner.
+    The fault machinery runs even for the ideal all-zero model —
+    bit-identity with ``faults=None`` is a property-tested guarantee, not a
+    shortcut — and never adds cycles: faults perturb state, not schedules.
     """
+    from .fused import (build_jax_fused, build_jax_fused_real,
+                        jax_fuse_eligible, run_numpy_fused, schedule_for)
+
     squeeze = mem.ndim == 2
     if squeeze:
         mem = mem[None]
     assert mem.shape[1:] == (cp.rows, cp.cols), (mem.shape, cp.rows, cp.cols)
     mem = np.ascontiguousarray(mem, dtype=np.uint8)
 
-    if backend == "jax":
-        if not have_jax():
-            raise RuntimeError("jax backend requested but jax is not installed")
-        run, word = _run_jax, JAX_WORD_BITS
-    elif backend == "numpy":
-        run, word = _run_numpy, 64
-    else:
-        # "interp" is a plan-level backend (CrossbarPlan.execute/_batch):
-        # a compiled trace alone cannot be interpreted
-        raise ValueError(f"unknown engine backend {backend!r}; "
-                         f"compiled traces support: ('numpy', 'jax')")
-
-    rng = as_rng(rng) if faults is not None else None
+    base, variant = parse_backend(backend)
+    if base == "jax" and not have_jax():
+        raise RuntimeError("jax backend requested but jax is not installed")
+    word = 64 if base == "numpy" else JAX_WORD_BITS
     B = mem.shape[0]
     step = min(word, B) if not max_batch else min(word, max(1, int(max_batch)))
-    chunks = [run(cp, mem[i : i + step], faults, rng)
-              if faults is not None else run(cp, mem[i : i + step])
-              for i in range(0, B, step)]
+
+    if variant == "auto":
+        if isinstance(faults, FaultRealization):
+            variant = "fused"        # the only faulty jax path; fine on numpy
+        elif cp.schedule is None:
+            variant = "unfused"
+        elif base == "jax":
+            variant = ("unfused" if faults is not None
+                       or not jax_fuse_eligible(cp) else "fused")
+        else:
+            variant = "fused"
+    if variant == "fused":
+        schedule_for(cp)             # attach on demand for fuse=False traces
+    if base == "jax":
+        if variant == "fused" and isinstance(faults, FaultModel):
+            raise ValueError(
+                "jax-fused injects faults via FaultRealization (explicit "
+                "per-cycle masks); for FaultModel sampling use backend='jax' "
+                "(unfused PRNG path) or a numpy backend")
+        if variant == "unfused" and isinstance(faults, FaultRealization):
+            raise ValueError(
+                "jax-unfused does not take a FaultRealization; use 'jax' "
+                "(auto) or 'jax-fused'")
+    if isinstance(faults, FaultRealization) and faults.batch != B:
+        raise ValueError(
+            f"FaultRealization batch {faults.batch} != memory batch {B}; "
+            f"sample the realization for the batch it will run under")
+
+    rng = as_rng(rng) if isinstance(faults, FaultModel) else None
+    jax_dtype = _word_dtype(step) if base == "jax" else None
+    chunks = []
+    for i in range(0, B, step):
+        sub = mem[i : i + step]
+        f = (faults.narrow(i, i + sub.shape[0])
+             if isinstance(faults, FaultRealization) else faults)
+        if base == "numpy":
+            run = run_numpy_fused if variant == "fused" else _run_numpy
+            chunks.append(run(cp, sub, f, rng) if f is not None
+                          else run(cp, sub))
+        elif variant == "fused":
+            chunks.append(build_jax_fused_real(cp, jax_dtype)(sub, f)
+                          if f is not None
+                          else build_jax_fused(cp, jax_dtype)(sub))
+        else:
+            chunks.append(_run_jax(cp, sub, f, rng) if f is not None
+                          else _run_jax(cp, sub))
     out = chunks[0] if len(chunks) == 1 else np.concatenate(chunks, axis=0)
     if squeeze:
         out = out[0]

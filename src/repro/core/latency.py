@@ -29,9 +29,16 @@ def compiled_cycles(plan: CrossbarPlan) -> int:
 
     Compiling validates scheduling once and yields ``n_cycles ==
     len(program)`` by construction; tests cross-check this against both the
-    closed-form ``plan.cycles`` and interpreter execution.
+    closed-form ``plan.cycles`` and interpreter execution. Macro-op fusion
+    is a simulator-speed transform only, so the fused schedule must account
+    for exactly the same cycles — asserted here so any compiler change that
+    dropped or merged *hardware* cycles would fail every latency table.
     """
-    return plan.compile().n_cycles
+    cp = plan.compile()
+    if cp.schedule is not None:
+        assert cp.schedule.n_cycles == cp.n_cycles, \
+            "fusion must not change cycle accounting"
+    return cp.n_cycles
 
 
 @dataclasses.dataclass

@@ -12,10 +12,17 @@ compiled-execution machinery on top:
 
     "interp" — the legacy per-op Python interpreter (``Crossbar.run``);
                validates every cycle as it executes.
-    "numpy"  — vectorized bit-plane executor (default; ~an order of magnitude
-               faster, exactly equal memory/cycles/stats).
-    "jax"    — ``lax.scan`` executor, jitted once per program; best for
+    "numpy"  — vectorized bit-plane executor (default; replays the fused
+               macro-op schedule — exactly equal memory/cycles/stats).
+    "jax"    — jitted executor; fused segment lowering where eligible, else
+               the per-cycle ``lax.scan``. Fast for single instances *and*
                batched (tiled / multi-instance) simulation.
+
+plus the explicit ``-fused`` / ``-unfused`` variants of the compiled
+backends (see ``engine.execute``). ``compile(fuse=True)`` is the default:
+every compiled trace carries its macro-op ``FusedSchedule``; pass
+``fuse=False`` to study the unfused trace (executors then use per-cycle
+replay unless a fused variant is requested explicitly).
 
 The compile cache is invalidated whenever ``self.program`` is rebound (the
 conv plans regenerate their program when the kernel changes).
@@ -58,14 +65,24 @@ class CrossbarPlan:
 
     # -- compilation ---------------------------------------------------------
 
-    def compile(self, validate: bool = True) -> CompiledProgram:
+    def compile(self, validate: bool = True,
+                fuse: bool = True) -> CompiledProgram:
         prog = self.program
         assert prog is not None, "plan has no program built yet"
         if self._compiled is None or self._compiled_src is not prog:
             self._compiled = compile_program(
                 prog, self.rows, self.cols, self.parts, self.parts,
-                validate=validate)
+                validate=validate, fuse=fuse)
             self._compiled_src = prog
+        elif fuse and self._compiled.schedule is None:
+            from .compile import fuse_program
+            self._compiled.schedule = fuse_program(self._compiled)
+        elif not fuse and self._compiled.schedule is not None:
+            # honor the explicit request for an unfused trace without
+            # clobbering the fused cache other callers rely on
+            return compile_program(
+                prog, self.rows, self.cols, self.parts, self.parts,
+                validate=validate, fuse=False)
         return self._compiled
 
     @property

@@ -17,7 +17,7 @@ lazily via module ``__getattr__``.
 from .energy import (DEFAULT_PROFILE, PROFILES, DeviceProfile, EnergyReport,
                      energy_table, format_energy_rows, get_profile,
                      io_energy_fj, trace_energy)
-from .faults import IDEAL, FaultModel
+from .faults import IDEAL, FaultModel, FaultRealization
 
 _LAZY = {
     "binary_matvec_sweep": "montecarlo",
@@ -32,6 +32,7 @@ _LAZY = {
 
 __all__ = [
     "DEFAULT_PROFILE", "DeviceProfile", "EnergyReport", "FaultModel",
+    "FaultRealization",
     "IDEAL", "PROFILES", "SweepPoint", "TMRReport", "binary_matvec_sweep",
     "bnn_accuracy_sweep", "energy_table", "format_energy_rows", "format_sweep",
     "get_profile", "io_energy_fj", "tmr_binary_matvec", "trace_energy",

@@ -23,6 +23,20 @@ Fault mechanisms (all independent, all per-crossbar-instance):
 * **init disturb** (``p_init``) — per cell per bulk-init cycle, the cell ends
   up flipped relative to the driven value.
 
+Two ways to specify faults:
+
+* :class:`FaultModel` — per-mechanism probabilities; each executor samples
+  realizations with its own RNG (numpy ``Generator`` on the numpy paths, a
+  threaded jax PRNG key on the jax path). Deterministic per (backend, seed),
+  but numpy and jax draws differ by construction.
+* :class:`FaultRealization` — the masks themselves, sampled ONCE per
+  original trace cycle (host-side, boolean arrays) and handed to any
+  executor, which packs and applies them per segment. This is what makes
+  cross-backend *bit-identical* faulty execution possible — the conformance
+  suite runs the same realization through numpy, numpy-fused and jax-fused
+  and asserts equality. Mask arrays are dense over the trace, so this path
+  is meant for conformance/debug-scale programs, not Monte-Carlo sweeps.
+
 This module deliberately imports nothing from ``repro.core`` so the engine
 can import it without a package cycle. The executors own the trace replay;
 this module owns the fault *state* (sampling + packing).
@@ -108,6 +122,111 @@ def bernoulli_words(rng: np.random.Generator, p: float, shape: Tuple[int, ...],
     return pack_sample_bits(rng.random((B,) + shape) < p, dtype)
 
 
+# ---------------------------------------------------------------------------
+# Explicit fault realizations (per original trace cycle, backend-agnostic)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FaultRealization:
+    """A concrete fault draw for one compiled trace, as boolean arrays.
+
+    Masks are indexed by the *original* cycle index ``t`` and compile-time op
+    slot ``w`` (executors that re-sort ops per cycle translate through the
+    segment permutation), so the same realization means the same physical
+    event set no matter how the replay is batched or fused:
+
+    * ``sa0``/``sa1`` — (B, rows, cols) static stuck-at maps.
+    * ``switch`` — (B, T, W, L) per-gate-evaluation switching failures over
+      the written line; col-mode cycles use ``[..., :rows+1]`` of the L axis,
+      row-mode cycles ``[..., :cols+1]`` (``L = max(rows, cols) + 1``).
+    * ``init_flip`` — (B, T, I, rows, cols) per-cell disturb flips for each
+      bulk-init rectangle entry.
+
+    Dense over the trace: sized for conformance/debug programs. For
+    Monte-Carlo scale use :class:`FaultModel` and let executors stream their
+    own draws.
+    """
+
+    sa0: np.ndarray
+    sa1: np.ndarray
+    switch: np.ndarray
+    init_flip: np.ndarray
+
+    def __post_init__(self):
+        assert self.sa0.shape == self.sa1.shape and self.sa0.ndim == 3
+        assert self.switch.ndim == 4 and self.init_flip.ndim == 5
+        assert not np.logical_and(self.sa0, self.sa1).any(), \
+            "a cell cannot be stuck at both 0 and 1"
+
+    @property
+    def batch(self) -> int:
+        return self.sa0.shape[0]
+
+    @property
+    def is_ideal(self) -> bool:
+        """True when no mask is set (the realization of the ideal device)."""
+        return not (self.sa0.any() or self.sa1.any() or self.switch.any()
+                    or self.init_flip.any())
+
+    def narrow(self, lo: int, hi: int) -> "FaultRealization":
+        """Batch-slice view ``[lo, hi)`` — used when executors chunk a batch
+        wider than one machine word."""
+        return FaultRealization(
+            sa0=self.sa0[lo:hi], sa1=self.sa1[lo:hi],
+            switch=self.switch[lo:hi], init_flip=self.init_flip[lo:hi])
+
+    @classmethod
+    def sample(cls, model: FaultModel, B: int, rows: int, cols: int,
+               n_cycles: int, W: int, I: int, rng=None) -> "FaultRealization":
+        """Draw one realization of ``model`` for a (rows, cols) trace of
+        ``n_cycles`` cycles with at most ``W`` ops / ``I`` init entries per
+        cycle. All mechanisms are sampled per original cycle, up front.
+
+        >>> r = FaultRealization.sample(FaultModel(), 2, 4, 4, 3, 2, 1)
+        >>> r.switch.shape, bool(r.switch.any())
+        ((2, 3, 2, 5), False)
+        """
+        rng = as_rng(rng)
+        L = max(rows, cols) + 1
+        u = rng.random((B, rows, cols))
+        sa0 = u < model.p_sa0
+        sa1 = (u >= model.p_sa0) & (u < model.p_sa0 + model.p_sa1)
+        switch = (rng.random((B, n_cycles, W, L)) < model.p_switch
+                  if model.p_switch else
+                  np.zeros((B, n_cycles, W, L), dtype=bool))
+        init_flip = (rng.random((B, n_cycles, I, rows, cols)) < model.p_init
+                     if model.p_init else
+                     np.zeros((B, n_cycles, I, rows, cols), dtype=bool))
+        return cls(sa0=sa0, sa1=sa1, switch=switch, init_flip=init_flip)
+
+    # -- packed views (bit b of each word = crossbar b), buffer layout -------
+
+    def stuck_words(self, dtype) -> Tuple[np.ndarray, np.ndarray]:
+        """(sa0, sa1) packed to the executors' transposed (C+1, R+1) buffer
+        layout, sacrificial lines fault-free (cf. ``sample_stuck_words``)."""
+        B, R, C = self.sa0.shape
+        sa0 = np.zeros((C + 1, R + 1), dtype=dtype)
+        sa1 = np.zeros_like(sa0)
+        sa0[:C, :R] = pack_sample_bits(self.sa0, dtype).T
+        sa1[:C, :R] = pack_sample_bits(self.sa1, dtype).T
+        return sa0, sa1
+
+    def switch_words(self, t: int, slots: np.ndarray, line: int,
+                     dtype) -> np.ndarray:
+        """(len(slots), line) fail words for original cycle ``t``'s ops at
+        compile slots ``slots`` over a written line of ``line`` cells."""
+        return pack_sample_bits(self.switch[:, t][:, slots, :line], dtype)
+
+    def init_words(self, t: int, i: int, dtype) -> np.ndarray:
+        """(C+1, R+1) disturb-flip words for init entry ``i`` of cycle ``t``
+        (sacrificial lines never flip)."""
+        B, R, C = self.sa0.shape
+        out = np.zeros((C + 1, R + 1), dtype=dtype)
+        out[:C, :R] = pack_sample_bits(self.init_flip[:, t, i], dtype).T
+        return out
+
+
 def sample_stuck_words(
     model: FaultModel, B: int, rows: int, cols: int,
     rng: np.random.Generator, dtype,
@@ -127,3 +246,76 @@ def sample_stuck_words(
         sa1[:cols, :rows] = pack_sample_bits(
             (u >= model.p_sa0) & (u < model.p_sa0 + model.p_sa1), dtype).T
     return sa0, sa1
+
+
+# ---------------------------------------------------------------------------
+# Fault sources: one word-mask protocol for both fault specifications
+# ---------------------------------------------------------------------------
+#
+# The numpy executors (per-cycle and fused) consume faults through a source
+# object so the replay code is identical for a FaultModel (masks drawn
+# on demand from the numpy RNG) and a FaultRealization (masks precomputed per
+# original cycle). The model source draws in a FIXED order — cycle ascending,
+# then gate id ascending within the cycle — which both executors follow, so
+# fused and unfused faulty runs are bit-identical under the same seed.
+
+
+class _ModelSource:
+    def __init__(self, model: FaultModel, rng, B: int, rows: int, cols: int,
+                 dtype):
+        self.model = model
+        self.rng = as_rng(rng)
+        self.B, self.rows, self.cols, self.dtype = B, rows, cols, dtype
+        self.has_switch = model.p_switch > 0.0
+
+    def stuck(self) -> Tuple[np.ndarray, np.ndarray]:
+        return sample_stuck_words(self.model, self.B, self.rows, self.cols,
+                                  self.rng, self.dtype)
+
+    def switch_col(self, t: int, slots, n: int) -> np.ndarray:
+        return bernoulli_words(self.rng, self.model.p_switch,
+                               (n, self.rows + 1), self.B, self.dtype)
+
+    def switch_row(self, t: int, slots, n: int) -> np.ndarray:
+        return bernoulli_words(self.rng, self.model.p_switch,
+                               (self.cols + 1, n), self.B, self.dtype)
+
+    def init_flip(self, t: int, i: int, c_idx, r_idx):
+        if not self.model.p_init:
+            return None
+        return bernoulli_words(self.rng, self.model.p_init,
+                               (len(c_idx), len(r_idx)), self.B, self.dtype)
+
+
+class _RealizationSource:
+    def __init__(self, real: FaultRealization, rows: int, cols: int, dtype):
+        assert real.sa0.shape[1:] == (rows, cols), \
+            (real.sa0.shape, rows, cols)
+        self.real = real
+        self.rows, self.cols, self.dtype = rows, cols, dtype
+        # skipping all-zero masks is an identity — saves the dense packing
+        # for stuck-at-only or ideal realizations
+        self.has_switch = bool(real.switch.any())
+
+    def stuck(self) -> Tuple[np.ndarray, np.ndarray]:
+        return self.real.stuck_words(self.dtype)
+
+    def switch_col(self, t: int, slots, n: int) -> np.ndarray:
+        return self.real.switch_words(t, slots, self.rows + 1, self.dtype)
+
+    def switch_row(self, t: int, slots, n: int) -> np.ndarray:
+        return self.real.switch_words(t, slots, self.cols + 1, self.dtype).T
+
+    def init_flip(self, t: int, i: int, c_idx, r_idx):
+        full = self.real.init_words(t, i, self.dtype)
+        return full[np.ix_(c_idx, r_idx)]
+
+
+def make_fault_source(faults, rng, B: int, rows: int, cols: int, dtype):
+    """``None`` | :class:`FaultModel` | :class:`FaultRealization` → source
+    (or ``None`` for fault-free execution)."""
+    if faults is None:
+        return None
+    if isinstance(faults, FaultRealization):
+        return _RealizationSource(faults, rows, cols, dtype)
+    return _ModelSource(faults, rng, B, rows, cols, dtype)

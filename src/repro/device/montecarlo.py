@@ -7,6 +7,12 @@ a few dozen word-level trace replays, not a thousand interpreted runs. That
 is what makes fault-rate → accuracy curves with ≥1000 samples feasible in
 seconds on 2 CPUs.
 
+Since macro-op fusion became the compile default, the numpy ``backend``
+these sweeps use replays faults per fused segment while still *sampling*
+per original cycle in the unfused draw order — so sweep results are
+bit-identical to the pre-fusion records for the same seed (enforced by
+``tests/test_conformance.py::test_fault_model_fused_matches_unfused``).
+
 Two sweeps:
 
 * :func:`binary_matvec_sweep` — one fixed binary-matvec instance replicated

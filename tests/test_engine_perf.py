@@ -1,0 +1,59 @@
+"""Engine wall-time guards (non-slow, deliberately coarse).
+
+The fused jax executor exists because the per-cycle ``lax.scan`` +
+``lax.switch`` replay was *slower than the interpreter* at batch=1
+(BENCH_engine.json recorded 0.5x before fusion). This smoke test pins the
+fix structurally: on a small program, a warmed fused-jax run must beat the
+per-op interpreter. Timings use best-of-N because this container's
+wall-clock jitters badly under host contention; the real margin is ~3-10x,
+so the assertion only trips if someone reintroduces a scan-per-cycle (or
+copy-per-cycle) pattern — not on scheduler noise.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BinaryMatvecPlan, have_jax
+
+
+def _best_of(fn, n):
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+@pytest.mark.skipif(not have_jax(), reason="jax not installed")
+def test_fused_jax_beats_interpreter_at_batch1():
+    rng = np.random.default_rng(0)
+    plan = BinaryMatvecPlan(48, 64, rows=64, cols=256, parts=8)
+    A = rng.choice([-1, 1], size=(48, 64))
+    x = rng.choice([-1, 1], size=64)
+
+    y_jax, pop_jax, _ = plan.run(A, x, backend="jax")   # jit warmup
+    y_int, pop_int, _ = plan.run(A, x, backend="interp")
+    np.testing.assert_array_equal(y_jax, y_int)          # speed, not drift
+    np.testing.assert_array_equal(pop_jax, pop_int)
+
+    t_jax = _best_of(lambda: plan.run(A, x, backend="jax"), 7)
+    t_int = _best_of(lambda: plan.run(A, x, backend="interp"), 5)
+    assert t_jax <= t_int, (
+        f"fused jax ({t_jax * 1e3:.1f} ms) slower than the interpreter "
+        f"({t_int * 1e3:.1f} ms) at batch=1 — scan-per-cycle regression?")
+
+
+def test_fusion_does_not_change_cycle_accounting():
+    """Fused and unfused replay must report the same cycles/stats — fusion
+    is a simulator-speed optimization, not a latency-model change."""
+    plan = BinaryMatvecPlan(48, 64, rows=64, cols=256, parts=8)
+    rng = np.random.default_rng(1)
+    mem = np.zeros((plan.rows, plan.cols), np.uint8)
+    plan.load_into(mem, rng.choice([-1, 1], (48, 64)),
+                   rng.choice([-1, 1], 64))
+    _, c_fused, s_fused = plan.execute(mem, backend="numpy-fused")
+    _, c_unfused, s_unfused = plan.execute(mem, backend="numpy-unfused")
+    assert c_fused == c_unfused == len(plan.program)
+    assert s_fused == s_unfused

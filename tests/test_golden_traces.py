@@ -1,0 +1,67 @@
+"""Golden-trace regression: compiled + fused schedules must not drift.
+
+tests/golden/*.json pin, for one representative plan per algorithm, the
+exact compiled trace (per-array sha256) and the fused segment schedule
+(boundaries, widths, independent spans, per-segment array digest). Any
+compiler or fusion change that alters lowering output fails HERE — loudly,
+with the diverging field named — instead of surfacing as a silent behavior
+shift downstream. If the change is intentional, regenerate with
+
+    PYTHONPATH=src python tools/gen_golden.py
+
+and justify the refresh in the commit message.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+GOLDEN = Path(__file__).parent / "golden"
+sys.path.insert(0, str(Path(__file__).parent.parent / "tools"))
+
+from gen_golden import golden_plans, trace_record  # noqa: E402
+
+_PLANS = None
+
+
+def _plans():
+    global _PLANS
+    if _PLANS is None:
+        _PLANS = golden_plans()
+    return _PLANS
+
+
+@pytest.mark.parametrize("name", ["binary_matvec", "matvec", "conv",
+                                  "binary_conv"])
+def test_golden_trace_unchanged(name):
+    path = GOLDEN / f"{name}.json"
+    assert path.exists(), (
+        f"missing golden fixture {path}; generate with "
+        f"`PYTHONPATH=src python tools/gen_golden.py`")
+    want = json.loads(path.read_text())
+    got = trace_record(_plans()[name])
+
+    # compare field-by-field for actionable failure messages
+    for key in ("geometry", "n_cycles", "W", "I", "stats"):
+        assert got[key] == want[key], f"{name}: compiled {key} changed"
+    for arr, digest in want["arrays"].items():
+        assert got["arrays"][arr] == digest, (
+            f"{name}: compiled array {arr!r} changed — if intentional, "
+            f"regenerate tests/golden/ via tools/gen_golden.py")
+    for key in ("n_segments", "n_spans", "n_cycles", "max_W"):
+        assert got["schedule"][key] == want["schedule"][key], (
+            f"{name}: fused schedule {key} changed")
+    for i, (g, w) in enumerate(zip(got["schedule"]["segments"],
+                                   want["schedule"]["segments"])):
+        assert g == w, f"{name}: fused segment {i} changed: {w} -> {g}"
+
+
+def test_golden_schedule_accounts_every_cycle():
+    """Fixtures themselves stay self-consistent (guards hand-edits)."""
+    for name in ("binary_matvec", "matvec", "conv", "binary_conv"):
+        rec = json.loads((GOLDEN / f"{name}.json").read_text())
+        segs = rec["schedule"]["segments"]
+        assert segs[0]["t0"] == 0 and segs[-1]["t1"] == rec["n_cycles"]
+        assert all(a["t1"] == b["t0"] for a, b in zip(segs, segs[1:]))
+        assert sum(s["t1"] - s["t0"] for s in segs) == rec["n_cycles"]

@@ -1,0 +1,95 @@
+"""(Re)generate the golden compiled+fused trace fixtures in tests/golden/.
+
+    PYTHONPATH=src python tools/gen_golden.py
+
+One fixture per algorithm plan (matvec, conv, binary matvec, binary conv) at
+a small representative geometry: trace shape, op-category stats, sha256 of
+every packed array, and the fused-schedule segment table. The regression
+test (tests/test_golden_traces.py) recompiles and diffs — a compiler change
+that alters lowering or fusion output fails loudly instead of silently
+shifting simulated behavior. Rerun this tool ONLY when such a change is
+intentional, and say so in the commit.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parent.parent
+GOLDEN = ROOT / "tests" / "golden"
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def golden_plans():
+    """name -> freshly built plan, with any conv kernel fixed (rng seed 99,
+    matching the equivalence-test fixtures)."""
+    from repro.core import (BinaryConvPlan, BinaryMatvecPlan, ConvPlan,
+                            MatvecPlan)
+    plans = {}
+    plans["binary_matvec"] = BinaryMatvecPlan(48, 64, rows=64, cols=256,
+                                              parts=8)
+    plans["matvec"] = MatvecPlan(32, 16, 8, 2, rows=256, cols=512, parts=16)
+    conv = ConvPlan(32, 6, 3, 4, rows=128, cols=512, parts=16)
+    conv.ensure_program(np.random.default_rng(99).integers(0, 16, size=(3, 3)))
+    plans["conv"] = conv
+    bconv = BinaryConvPlan(32, 32, 3, rows=64, cols=256, parts=8)
+    bconv.ensure_program(np.random.default_rng(99).choice([-1, 1],
+                                                          size=(3, 3)))
+    plans["binary_conv"] = bconv
+    return plans
+
+
+def array_digest(a: np.ndarray) -> str:
+    """Shape/dtype-qualified sha256 (shape changes must not collide)."""
+    h = hashlib.sha256()
+    h.update(f"{a.dtype.str}:{a.shape}:".encode())
+    h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+def trace_record(plan) -> dict:
+    cp = plan.compile()
+    sched = cp.schedule
+    rec = {
+        "geometry": {"rows": cp.rows, "cols": cp.cols,
+                     "parts": plan.parts},
+        "n_cycles": cp.n_cycles,
+        "W": cp.W,
+        "I": cp.I,
+        "stats": dict(cp.stats),
+        "arrays": {name: array_digest(getattr(cp, name))
+                   for name in ("mode", "nops", "gate", "dst", "ins", "sel",
+                                "init_r", "init_c", "init_v", "row_masks",
+                                "col_masks")},
+        "schedule": {
+            **sched.summary(),
+            "segments": [
+                {"mode": seg.mode, "t0": seg.t0, "t1": seg.t1, "W": seg.W,
+                 "spans": [list(s) for s in seg.spans],
+                 "digest": array_digest(np.concatenate([
+                     seg.nops.reshape(-1), seg.gate.reshape(-1).astype(np.int32),
+                     seg.dst.reshape(-1), seg.ins.reshape(-1),
+                     seg.sel.reshape(-1), seg.perm.reshape(-1)]))}
+                for seg in sched.segments
+            ],
+        },
+    }
+    return rec
+
+
+def main() -> None:
+    GOLDEN.mkdir(parents=True, exist_ok=True)
+    for name, plan in golden_plans().items():
+        path = GOLDEN / f"{name}.json"
+        rec = trace_record(plan)
+        path.write_text(json.dumps(rec, indent=1, sort_keys=True) + "\n")
+        print(f"wrote {path}  (T={rec['n_cycles']} "
+              f"segments={rec['schedule']['n_segments']})")
+
+
+if __name__ == "__main__":
+    main()
