@@ -1,4 +1,11 @@
-"""Performance hillclimb: hypothesis -> change -> re-lower -> measure.
+"""LEGACY (model-stack) performance hillclimb: hypothesis -> measure.
+
+**Scope note:** this script targets the seed LLM *model stack* — roofline
+dry-runs of the olmo/arctic/yi train/decode cells via ``repro.launch.dryrun``
+— not the MatPIM crossbar engine. Engine/serving perf is tracked by
+``benchmarks.run --only engine|serve`` (stable-schema ``BENCH_*.json``);
+this file is kept runnable for the §Perf log in EXPERIMENTS.md and the
+hillclimb table in ``benchmarks.report``, which read its JSONs.
 
 Three cells (worst roofline fraction / most collective-bound / most
 representative of MatPIM's technique) are iterated on the dominant
@@ -6,17 +13,22 @@ roofline term; every named iteration below is a concrete hypothesis with a
 napkin prediction (see EXPERIMENTS.md §Perf for the log). Run:
 
     PYTHONPATH=src python -m benchmarks.hillclimb [--target olmo|arctic|yi]
+
+Results land in the repo-root ``results/hillclimb/`` regardless of CWD
+(the same path convention ``benchmarks/run.py`` and ``report.py`` use).
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
+from pathlib import Path
 
 from repro.configs import TrainConfig
 from repro.launch.dryrun import run_cell
 
-RESULTS = "results/hillclimb"
+# repo-root-relative (CWD-independent), matching benchmarks/run.py
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "hillclimb"
 
 
 # Each iteration: (name, kwargs for run_cell, hypothesis string)
@@ -149,13 +161,15 @@ def main():
     ap.add_argument("--target", default=None,
                     choices=list(CELLS) + [None])
     args = ap.parse_args()
+    print("NOTE: legacy model-stack hillclimb (LLM roofline cells); MatPIM "
+          "engine perf lives in `benchmarks.run --only engine|serve`")
     os.makedirs(RESULTS, exist_ok=True)
     targets = [args.target] if args.target else list(CELLS)
     for tgt in targets:
         arch, shape = CELLS[tgt]
         print(f"\n=== hillclimb {tgt}: {arch} × {shape} ===")
         for name, kw, hyp in ITERATIONS[tgt]:
-            out = os.path.join(RESULTS, f"{tgt}__{name}.json")
+            out = str(RESULTS / f"{tgt}__{name}.json")
             if os.path.exists(out):
                 res = json.load(open(out))
                 print(f"[cached] {name}: {fmt(res)}")

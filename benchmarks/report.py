@@ -23,7 +23,7 @@ RESULTS_DIR = ROOT / "results"
 # every bench that benchmarks/run.py persists as BENCH_<name>.json; the
 # report summarizes all of them and FAILS when one is absent (a missing
 # record used to vanish silently, hiding a broken bench from the PR diff)
-BENCH_NAMES = ("engine", "device", "apps")
+BENCH_NAMES = ("engine", "device", "apps", "serve")
 
 ARCH_ORDER = ["whisper-tiny", "mamba2-370m", "granite-moe-1b-a400m",
               "arctic-480b", "stablelm-3b", "yi-34b", "olmo-1b",
@@ -142,7 +142,7 @@ def _is_walltime_metric(name: str) -> bool:
     Everything else (cycles, accuracy, energy) is deterministic or
     higher-is-better and only gets a 'changed' note, not a regression flag.
     """
-    return (name.startswith("engine/") or name.endswith("_wall")
+    return (name.startswith(("engine/", "serve/")) or name.endswith("_wall")
             or name.endswith("/total"))
 
 

@@ -3,10 +3,10 @@ benchmarks + the roofline collector. Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
 
-The ``engine``, ``device`` and ``apps`` benches additionally write
-stable-schema ``BENCH_engine.json`` / ``BENCH_device.json`` /
-``BENCH_apps.json`` at the repo root (uploaded as a CI artifact) so the
-perf trajectory is tracked across PRs.
+The ``engine``, ``device``, ``apps`` and ``serve`` benches additionally
+write stable-schema ``BENCH_engine.json`` / ``BENCH_device.json`` /
+``BENCH_apps.json`` / ``BENCH_serve.json`` at the repo root (uploaded as a
+CI artifact) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -22,7 +22,7 @@ ROOT = Path(__file__).resolve().parent.parent
 RESULTS_DIR = ROOT / "results"      # dryrun/roofline JSONs, CWD-independent
 
 # benches that persist a BENCH_<name>.json perf record at the repo root
-_JSON_BENCHES = ("engine", "device", "apps")
+_JSON_BENCHES = ("engine", "device", "apps", "serve")
 _RECORDS: dict = {}
 _CUR: list = [None]
 
@@ -310,6 +310,81 @@ def bench_apps(quick=False):
          f"correct={ok}")
 
 
+def bench_serve(quick=False):
+    """Plan-cache serving layer (repro.serve.matpim): batched-bucket
+    throughput vs sequential per-request execute on both engine backends,
+    plan-cache hit rates, and a mixed-kind continuous-batching stream.
+
+    The headline rows compare R mixed-shape binary-matvec requests that
+    bucket onto ONE plan key: ``seq`` executes them one engine call each
+    (plan reuse but no batching — what every pre-serve caller does), while
+    ``batched`` coalesces the bucket onto the bit-plane batch axis in a
+    single flush. Same compiled plan, same results; the speedup is pure
+    request coalescing. jit compiles are excluded via a warmup flush.
+    """
+    from repro.core import have_jax
+    from repro.serve.matpim import PlanService, ServeRequest
+
+    rng = np.random.default_rng(0)
+    R = 16 if quick else 32
+    m_hi, n_hi = (256, 128) if quick else (1024, 256)  # powers of two
+    # mixed shapes in (hi/2, hi] so every request pads into one pow2 bucket
+    shapes = [(int(rng.integers(m_hi // 2 + 1, m_hi + 1)),
+               int(rng.integers(n_hi // 2 + 1, n_hi + 1))) for _ in range(R)]
+    reqs = [(rng.choice([-1, 1], size=(m, n)), rng.choice([-1, 1], size=n))
+            for m, n in shapes]
+
+    def seq(svc):
+        for A, x in reqs:
+            svc.submit_binary_matvec(A, x)
+            svc.flush()                    # one engine call per request
+        return svc
+
+    def batched(svc):
+        ts = [svc.submit_binary_matvec(A, x) for A, x in reqs]
+        svc.flush()                        # one engine call per bucket
+        return ts
+
+    for be in ("numpy",) + (("jax",) if have_jax() else ()):
+        svc = PlanService(backend=be)
+        seq(svc)                           # warmup: compile plan + runners
+        batched(svc)
+        t_seq = _best_of(lambda: seq(svc), n=2, warmup=0)
+        _rec(f"serve/bmv_stream{R}_seq_{be}", t_seq,
+             f"backend={be};requests={R};bucket=({m_hi},{n_hi})")
+        t_bat = _best_of(lambda: batched(svc), n=2, warmup=0)
+        _rec(f"serve/bmv_stream{R}_batched_{be}", t_bat,
+             f"speedup_vs_seq={t_seq/t_bat:.1f};"
+             f"hit_rate={svc.stats.hit_rate:.3f};"
+             f"batches_per_flush=1;requests={R}")
+
+    # mixed-kind continuous-batching stream (numpy; conv jits are heavy)
+    n_each = 4 if quick else 8
+    stream = []
+    for i in range(n_each):
+        m, n = int(rng.integers(8, 48)), int(rng.integers(16, 64))
+        stream.append(ServeRequest("binary_matvec",
+                                   (rng.choice([-1, 1], size=(m, n)),
+                                    rng.choice([-1, 1], size=n))))
+        stream.append(ServeRequest("matvec",
+                                   (rng.integers(0, 16, size=(m, n)),
+                                    rng.integers(0, 16, size=n), 4)))
+        img = rng.integers(0, 64, size=(int(rng.integers(8, 17)),
+                                        int(rng.integers(8, 17))))
+        stream.append(ServeRequest("conv", (img, np.array(
+            [[1, 2, 1], [2, 4, 2], [1, 2, 1]]), 8)))
+    svc = PlanService(backend="numpy")
+    t0 = time.perf_counter()
+    tickets = svc.run_stream(iter(stream), slots=32)
+    us = (time.perf_counter() - t0) * 1e6
+    n_buckets = len({t.key for t in tickets})
+    _rec("serve/mixed_stream_numpy", us,
+         f"requests={len(tickets)};plan_keys={n_buckets};"
+         f"batches={svc.stats.batches};hit_rate={svc.stats.hit_rate:.3f};"
+         f"evictions={svc.stats.evictions};"
+         f"req_per_s={len(tickets)/(us/1e6):.1f}")
+
+
 def bench_kernels(quick=False):
     """Pallas kernels (interpret mode on CPU) vs jnp oracles: wall time."""
     import jax.numpy as jnp
@@ -405,12 +480,21 @@ def main():
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
+    try:  # persistent XLA cache (same as tests/conftest.py): jit compiles
+        # are excluded from timed regions via warmups, so this only trims
+        # benchmark start-up, locally and in the CI bench/nightly jobs
+        import jax
+        jax.config.update("jax_compilation_cache_dir", str(ROOT / ".jax_cache"))
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
+    except Exception:  # pragma: no cover - jax absent or too old
+        pass
     benches = {
         "table1": bench_table1_matvec,
         "table2": bench_table2_conv,
         "engine": bench_engine,
         "device": bench_device,
         "apps": bench_apps,
+        "serve": bench_serve,
         "kernels": bench_kernels,
         "train": bench_train_throughput,
         "roofline": bench_roofline,

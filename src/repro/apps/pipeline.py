@@ -25,6 +25,13 @@ Stage-to-stage activations always pass through the host — MatPIM has no
 inter-array copy primitive — which is exactly the boundary this layer makes
 visible and prices.
 
+Stages fetch their tiled plans from a shared
+:class:`~repro.serve.matpim.PlanService` (the process-wide default unless a
+``service`` is passed to the stage constructor): two stages — or two whole
+pipelines, e.g. every sample of a Monte-Carlo fault sweep — with the same
+shape, geometry and (for convs) kernel reuse ONE compiled+fused plan
+instead of private recompiles.
+
 >>> import numpy as np
 >>> rng = np.random.default_rng(0)
 >>> W1 = rng.choice([-1, 1], size=(16, 32))
@@ -44,9 +51,18 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.latency import host_io_cycles
-from ..core.tiling import (TiledBinaryMatvec, TiledConv2d, TiledMatvec,
-                           majority_sign)
+from ..core.tiling import majority_sign
 from ..device.energy import get_profile, io_energy_fj
+
+
+def _fetch_tiled(service, kind: str, *args, key_extra=None, **kw):
+    """Stage plan source: the given :class:`~repro.serve.matpim.PlanService`
+    or the process-wide default. Deferred import keeps apps importable
+    without the serve package loaded up front."""
+    if service is None:
+        from ..serve.matpim import get_default_service
+        service = get_default_service()
+    return service.tiled(kind, *args, key_extra=key_extra, **kw)
 
 
 @dataclasses.dataclass
@@ -152,10 +168,10 @@ class BinaryMatvecStage(Stage):
     kind = "binary-matvec"
 
     def __init__(self, W: np.ndarray, name: Optional[str] = None,
-                 keep_popcounts: bool = False, **plan_kw):
+                 keep_popcounts: bool = False, service=None, **plan_kw):
         M, K = W.shape
         self.W = W
-        self.tiled = TiledBinaryMatvec(M, K, **plan_kw)
+        self.tiled = _fetch_tiled(service, "binary_matvec", M, K, **plan_kw)
         self.name = name or f"bmv_{M}x{K}"
         self.keep_popcounts = keep_popcounts
         self.last_popcounts: Optional[np.ndarray] = None
@@ -183,10 +199,10 @@ class MatvecStage(Stage):
     kind = "matvec"
 
     def __init__(self, A: np.ndarray, N: int, name: Optional[str] = None,
-                 **plan_kw):
+                 service=None, **plan_kw):
         M, K = A.shape
         self.A, self.N = A, N
-        self.tiled = TiledMatvec(M, K, N, **plan_kw)
+        self.tiled = _fetch_tiled(service, "matvec", M, K, N, **plan_kw)
         self.name = name or f"mv_{M}x{K}_N{N}"
 
     def _run(self, x, backend, max_batch, faults, rng, prof):
@@ -226,13 +242,16 @@ class ConvStage(Stage):
 
     def __init__(self, kernel: np.ndarray, shape: Tuple[int, int], N: int,
                  signed: bool = True, post: Optional[Callable] = None,
-                 name: Optional[str] = None, **tile_kw):
+                 name: Optional[str] = None, service=None, **tile_kw):
         self.kernel = np.asarray(kernel, dtype=np.int64)
         self.kmod = self.kernel % (1 << N)
         self.N, self.signed, self.post = N, signed, post
         H, Wd = shape
         k = self.kernel.shape[0]
-        self.tiled = TiledConv2d(H, Wd, k, N, **tile_kw)
+        # conv programs specialize on the kernel: it joins the cache key so
+        # stages with different kernels never share (and thrash) one plan
+        self.tiled = _fetch_tiled(service, "conv", H, Wd, k, N,
+                                  key_extra=self.kmod.tobytes(), **tile_kw)
         self.tiled.plan.ensure_program(self.kmod)
         self.name = name or f"conv{k}x{k}_{H}x{Wd}_N{N}"
         self.out_shape = (self.tiled.oh, self.tiled.ow)
@@ -267,12 +286,13 @@ class BinaryConvStage(Stage):
     kind = "binary-conv"
 
     def __init__(self, kernel: np.ndarray, shape: Tuple[int, int],
-                 name: Optional[str] = None, **tile_kw):
+                 name: Optional[str] = None, service=None, **tile_kw):
         self.kernel = np.asarray(kernel, dtype=np.int64)
         assert set(np.unique(self.kernel)) <= {-1, 1}, "binary conv taps are ±1"
         H, Wd = shape
         k = self.kernel.shape[0]
-        self.tiled = TiledConv2d(H, Wd, k, 1, binary=True, **tile_kw)
+        self.tiled = _fetch_tiled(service, "conv", H, Wd, k, 1, binary=True,
+                                  key_extra=self.kernel.tobytes(), **tile_kw)
         self.tiled.plan.ensure_program(self.kernel)
         self.name = name or f"bconv{k}x{k}_{H}x{Wd}"
         self.out_shape = (self.tiled.oh, self.tiled.ow)

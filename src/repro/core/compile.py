@@ -48,6 +48,7 @@ always equals the unfused trace length, and final memory is bit-identical
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -106,6 +107,74 @@ class _MaskPool:
         return np.stack(self.masks, axis=0)
 
 
+# ceiling on memoized executor artifacts per CompiledProgram (replay plans
+# and jitted runners; keys span (kind, word dtype, fault path)). The working
+# set of a steady-state caller is 1-4 entries; the bound exists so a
+# long-lived service touching many word dtypes / fault paths cannot retain
+# one jitted executable per key forever.
+CACHE_MAX_ENTRIES = 8
+
+
+class RunnerCache:
+    """Bounded LRU store for executor-private memoization.
+
+    ``CompiledProgram._caches`` entries are cheap to rebuild but expensive to
+    hold (jax entries pin compiled executables and their device buffers), so
+    the cache evicts least-recently-used entries past ``max_entries`` and
+    supports ``clear()`` for explicit release — the hook
+    :class:`repro.serve.matpim.PlanService` eviction uses. Dict-like surface:
+    ``get`` / ``[]=`` / ``pop`` / ``in`` / ``len`` / ``keys`` / ``values``.
+
+    ``on_evict(value)`` fires for every LRU eviction (not for ``pop`` or
+    ``clear``) — the service layer reuses this class for its plan cache and
+    releases the evicted plan's executor caches there.
+    """
+
+    def __init__(self, max_entries: int = CACHE_MAX_ENTRIES, on_evict=None):
+        self.max_entries = int(max_entries)
+        self.evictions = 0
+        self._on_evict = on_evict
+        self._d: "OrderedDict[object, object]" = OrderedDict()
+
+    def get(self, key, default=None):
+        if key not in self._d:
+            return default
+        self._d.move_to_end(key)
+        return self._d[key]
+
+    def __getitem__(self, key):
+        if key not in self._d:
+            raise KeyError(key)
+        return self.get(key)
+
+    def __setitem__(self, key, value) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.max_entries:
+            _, old = self._d.popitem(last=False)
+            self.evictions += 1
+            if self._on_evict is not None:
+                self._on_evict(old)
+
+    def pop(self, key, default=None):
+        return self._d.pop(key, default)
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def keys(self):
+        return self._d.keys()
+
+    def values(self):
+        return self._d.values()
+
+
 @dataclasses.dataclass
 class CompiledProgram:
     """Packed trace of one program on a fixed crossbar geometry.
@@ -140,7 +209,14 @@ class CompiledProgram:
     schedule: Optional["FusedSchedule"] = None
 
     def __post_init__(self):
-        self._caches: Dict[object, object] = {}  # executor-private memoization
+        self._caches = RunnerCache()  # executor-private memoization (bounded)
+
+    def clear_caches(self) -> None:
+        """Release every memoized executor artifact (replay plans, jitted
+        runners and their device buffers). Correctness-neutral: the next
+        execute rebuilds on demand. Long-lived services call this when a
+        plan leaves their working set."""
+        self._caches.clear()
 
     @property
     def nbytes(self) -> int:

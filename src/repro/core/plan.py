@@ -89,6 +89,13 @@ class CrossbarPlan:
     def cycles(self) -> int:
         return len(self.program)
 
+    def clear_caches(self) -> None:
+        """Drop the compiled trace's executor memoizations (replay plans,
+        jitted runners). The compiled trace itself stays cached; execution
+        after this call rebuilds the runners on demand."""
+        if self._compiled is not None:
+            self._compiled.clear_caches()
+
     # -- device models -------------------------------------------------------
 
     def energy(self, profile=None):
@@ -118,13 +125,18 @@ class CrossbarPlan:
 
         Returns (final mem, cycle count, stats). Passing ``xbar`` forces the
         interpreter path on that crossbar object (legacy API), replacing its
-        memory with ``mem``. ``faults``/``rng`` select a stochastic device
+        memory with ``mem`` and resetting its cycle/stat counters — every
+        call reports THIS run's accounting, exactly like the compiled
+        backends and the batched interpreter path, however often the
+        crossbar is reused. ``faults``/``rng`` select a stochastic device
         model (compiled backends only; see ``engine.execute``).
         """
         if xbar is not None or backend == "interp":
             self._reject_interp_faults(faults)
             xb = xbar or self.new_crossbar()
             xb.mem[:, :] = mem
+            xb.cycles = 0
+            xb.stats = {k: 0 for k in xb.stats}
             xb.run(self.program)
             return xb.mem, xb.cycles, dict(xb.stats)
         res = execute(self.compile(), mem, backend=backend, faults=faults,
@@ -148,11 +160,15 @@ class CrossbarPlan:
         ``loader(mem)`` writes only the operand cells. With a caller-supplied
         ``xbar`` the loader applies to its EXISTING memory (preserving any
         other state the caller staged there, as the legacy drivers did) and
-        the interpreter runs on it; otherwise a fresh zeroed image goes
-        through the selected backend.
+        the interpreter runs on it; cycle/stat counters reset per call —
+        memory is the only state that survives reuse, exactly as in
+        :meth:`execute`. Otherwise a fresh zeroed image goes through the
+        selected backend.
         """
         if xbar is not None:
             loader(xbar.mem)
+            xbar.cycles = 0
+            xbar.stats = {k: 0 for k in xbar.stats}
             xbar.run(self.program)
             return xbar.mem, xbar.cycles, dict(xbar.stats)
         mem = np.zeros((self.rows, self.cols), dtype=np.uint8)

@@ -142,17 +142,22 @@ class TiledMatvec(_TiledEnergyMixin):
         self.plan = MatvecPlan(self.tile_m, self.tile_k, N, alpha=1,
                                rows=rows, cols=cols, parts=parts)
 
-    def run(self, A: np.ndarray, x: np.ndarray, backend: str = "numpy",
-            max_batch: Optional[int] = None, faults=None, rng=None
-            ) -> Tuple[np.ndarray, TiledResult]:
-        M, K, N = self.M, self.K, self.N
+    def bind(self, A: np.ndarray, x: np.ndarray) -> Tuple:
+        """Deferred-execution view of :meth:`run`.
+
+        Returns ``(load_tile, decode_tile, finalize)``: the first two have
+        the :func:`_execute_tiles` signatures, ``finalize(partials)`` tree-
+        reduces the decoded tile partials into ``(y, reduce_depth)``. This
+        is the seam the serving layer (:mod:`repro.serve.matpim`) uses to
+        coalesce many requests' tiles into one engine batch.
+        """
+        M, K = self.M, self.K
         tm, tk, gm, gk = self.tile_m, self.tile_k, self.gm, self.gk
         assert A.shape == (M, K) and x.shape == (K,)
         Ap = np.zeros((gm * tm, gk * tk), dtype=np.int64)
         Ap[:M, :K] = A
         xp = np.zeros(gk * tk, dtype=np.int64)
         xp[:K] = x
-
         plan = self.plan
 
         def load(b, mem):
@@ -161,18 +166,30 @@ class TiledMatvec(_TiledEnergyMixin):
                                    j * tk : (j + 1) * tk],
                            xp[j * tk : (j + 1) * tk])
 
-        partials, cycles = _execute_tiles(
-            plan, gm * gk, load,
-            lambda b, mem: plan.decode_y(mem).astype(object),
-            backend, max_batch, faults, rng)
+        def decode(b, mem):
+            return plan.decode_y(mem).astype(object)
 
-        W = plan.W  # accumulator width: results exact mod 2^(2N)
-        y = np.empty(gm * tm, dtype=object)
-        depth = 0
-        for i in range(gm):
-            total, depth = tree_reduce(partials[i * gk : (i + 1) * gk])
-            y[i * tm : (i + 1) * tm] = total % (1 << W)
-        return y[:M], TiledResult((gm, gk), gm * gk, cycles, depth, backend)
+        def finalize(partials):
+            W = plan.W  # accumulator width: results exact mod 2^(2N)
+            y = np.empty(gm * tm, dtype=object)
+            depth = 0
+            for i in range(gm):
+                total, depth = tree_reduce(partials[i * gk : (i + 1) * gk])
+                y[i * tm : (i + 1) * tm] = total % (1 << W)
+            return y[:M], depth
+
+        return load, decode, finalize
+
+    def run(self, A: np.ndarray, x: np.ndarray, backend: str = "numpy",
+            max_batch: Optional[int] = None, faults=None, rng=None
+            ) -> Tuple[np.ndarray, TiledResult]:
+        load, decode, finalize = self.bind(A, x)
+        partials, cycles = _execute_tiles(
+            self.plan, self.n_tiles, load, decode,
+            backend, max_batch, faults, rng)
+        y, depth = finalize(partials)
+        return y, TiledResult((self.gm, self.gk), self.n_tiles, cycles,
+                              depth, backend)
 
 
 def _run_kw(kw):
@@ -210,9 +227,14 @@ class TiledBinaryMatvec(_TiledEnergyMixin):
         self.plan = BinaryMatvecPlan(self.tile_m, self.tile_k,
                                      rows=rows, cols=cols, parts=parts)
 
-    def run(self, A: np.ndarray, x: np.ndarray, backend: str = "numpy",
-            max_batch: Optional[int] = None, faults=None, rng=None
-            ) -> Tuple[np.ndarray, TiledResult]:
+    def bind(self, A: np.ndarray, x: np.ndarray) -> Tuple:
+        """Deferred-execution view of :meth:`run` (see
+        :meth:`TiledMatvec.bind`). ``finalize(partials)`` returns
+        ``(popcounts, reduce_depth)`` — the raw per-row XNOR popcounts
+        (⟨A[r], x⟩ = 2·pop − K), tile padding already subtracted — so
+        callers that padded K further (the serving layer's shape buckets)
+        can re-threshold against the true operand length.
+        """
         M, K = self.M, self.K
         tm, tk, gm, gk = self.tile_m, self.tile_k, self.gm, self.gk
         assert A.shape == (M, K) and x.shape == (K,)
@@ -223,7 +245,6 @@ class TiledBinaryMatvec(_TiledEnergyMixin):
         xp = np.ones(gk * tk, dtype=np.int64)
         xp[:K] = x
         n_pad = gk * tk - K
-
         plan = self.plan
 
         def load(b, mem):
@@ -232,20 +253,31 @@ class TiledBinaryMatvec(_TiledEnergyMixin):
                                    j * tk : (j + 1) * tk],
                            xp[j * tk : (j + 1) * tk])
 
-        partials, cycles = _execute_tiles(
-            plan, gm * gk, load,
-            lambda b, mem: plan.decode_popcount(mem).astype(np.int64),
-            backend, max_batch, faults, rng)
+        def decode(b, mem):
+            return plan.decode_popcount(mem).astype(np.int64)
 
-        pop = np.empty((gm, tm), dtype=np.int64)
-        depth = 0
-        for i in range(gm):
-            total, depth = tree_reduce(partials[i * gk : (i + 1) * gk])
-            pop[i] = total - n_pad
-        pop_flat = pop.reshape(-1)[:M]
-        y = majority_sign(pop_flat, K)
+        def finalize(partials):
+            pop = np.empty((gm, tm), dtype=np.int64)
+            depth = 0
+            for i in range(gm):
+                total, depth = tree_reduce(partials[i * gk : (i + 1) * gk])
+                pop[i] = total - n_pad
+            return pop.reshape(-1)[:M], depth
+
+        return load, decode, finalize
+
+    def run(self, A: np.ndarray, x: np.ndarray, backend: str = "numpy",
+            max_batch: Optional[int] = None, faults=None, rng=None
+            ) -> Tuple[np.ndarray, TiledResult]:
+        load, decode, finalize = self.bind(A, x)
+        partials, cycles = _execute_tiles(
+            self.plan, self.n_tiles, load, decode,
+            backend, max_batch, faults, rng)
+        pop_flat, depth = finalize(partials)
+        y = majority_sign(pop_flat, self.K)
         self.last_popcounts = pop_flat  # XNOR matches per row (dot = 2*pop - K)
-        return y, TiledResult((gm, gk), gm * gk, cycles, depth, backend)
+        return y, TiledResult((self.gm, self.gk), self.n_tiles, cycles,
+                              depth, backend)
 
     def popcounts(self, A: np.ndarray, x: np.ndarray,
                   backend: str = "numpy") -> np.ndarray:
@@ -349,9 +381,11 @@ class TiledConv2d:
             self.plan.ensure_program(K)
         return self.plan.energy(profile)
 
-    def run(self, A: np.ndarray, Kk: np.ndarray, backend: str = "numpy",
-            max_batch: Optional[int] = None, faults=None, rng=None
-            ) -> Tuple[np.ndarray, TiledResult]:
+    def bind(self, A: np.ndarray, Kk: np.ndarray) -> Tuple:
+        """Deferred-execution view of :meth:`run` (see
+        :meth:`TiledMatvec.bind`); (re)specializes the plan's program on
+        ``Kk`` up front. ``finalize(tiles)`` assembles the halo-tiled
+        outputs and returns ``(out, 0)`` (conv has no host reduction)."""
         H, Wd, k = self.H, self.Wd, self.k
         assert A.shape == (H, Wd) and Kk.shape == (k, k)
         pad_val = 1 if self.binary else 0
@@ -369,21 +403,32 @@ class TiledConv2d:
             plan.load_into(mem, Ap[r0 : r0 + self.tile_m,
                                    c0 : c0 + self.tile_n], Kk)
 
-        tiles, cycles = _execute_tiles(
-            plan, self.gh * self.gw, load,
-            lambda b, mem: plan.decode_out(mem), backend, max_batch,
-            faults, rng)
+        def decode(b, mem):
+            return plan.decode_out(mem)
 
-        dtype = np.int64 if self.binary else object
-        out = np.zeros((self.gh * self.th_out, self.gw * self.tw_out),
-                       dtype=dtype)
-        for i in range(self.gh):
-            for j in range(self.gw):
-                out[i * self.th_out : (i + 1) * self.th_out,
-                    j * self.tw_out : (j + 1) * self.tw_out] = \
-                    tiles[i * self.gw + j]
-        return out[: self.oh, : self.ow], TiledResult(
-            (self.gh, self.gw), self.gh * self.gw, cycles, 0, backend)
+        def finalize(tiles):
+            dtype = np.int64 if self.binary else object
+            out = np.zeros((self.gh * self.th_out, self.gw * self.tw_out),
+                           dtype=dtype)
+            for i in range(self.gh):
+                for j in range(self.gw):
+                    out[i * self.th_out : (i + 1) * self.th_out,
+                        j * self.tw_out : (j + 1) * self.tw_out] = \
+                        tiles[i * self.gw + j]
+            return out[: self.oh, : self.ow], 0
+
+        return load, decode, finalize
+
+    def run(self, A: np.ndarray, Kk: np.ndarray, backend: str = "numpy",
+            max_batch: Optional[int] = None, faults=None, rng=None
+            ) -> Tuple[np.ndarray, TiledResult]:
+        load, decode, finalize = self.bind(A, Kk)
+        tiles, cycles = _execute_tiles(
+            self.plan, self.n_tiles, load, decode, backend, max_batch,
+            faults, rng)
+        out, _ = finalize(tiles)
+        return out, TiledResult(
+            (self.gh, self.gw), self.n_tiles, cycles, 0, backend)
 
 
 def tiled_conv2d(A: np.ndarray, Kk: np.ndarray, N: int, **kw):

@@ -1,8 +1,11 @@
 """Jit'd public wrappers around the Pallas kernels (+ CPU fallbacks).
 
-On CPU (this container) the kernels run with ``interpret=True``; on TPU they
-compile to Mosaic. ``use_pallas`` picks automatically. The wrappers are what
-models/ and the serving engine call.
+On TPU the kernels compile to Mosaic and ``use_pallas`` defaults on. On CPU
+(this container) Pallas only *interprets* — far slower than the jnp ``ref``
+fallbacks — so the default follows :func:`_on_tpu` and dispatches to ``ref``
+off-TPU; pass ``use_pallas=True`` explicitly to force interpret-mode Pallas
+(the kernel test suites do). The wrappers are what models/ and the serving
+engine call.
 """
 from __future__ import annotations
 
@@ -34,7 +37,7 @@ def binary_dense(x: jnp.ndarray, w_packed: jnp.ndarray, K: int,
     x2 = x.reshape(-1, K)
     xp = pack_bits(x2, axis=-1)
     if use_pallas is None:
-        use_pallas = True
+        use_pallas = _on_tpu()
     if use_pallas:
         y = binary_matmul(xp, w_packed, interpret=not _on_tpu())
     else:
@@ -45,7 +48,7 @@ def binary_dense(x: jnp.ndarray, w_packed: jnp.ndarray, K: int,
 def matvec(a: jnp.ndarray, x: jnp.ndarray, use_pallas: bool | None = None
            ) -> jnp.ndarray:
     if use_pallas is None:
-        use_pallas = True
+        use_pallas = _on_tpu()
     if use_pallas:
         return splitk_matvec(a, x, interpret=not _on_tpu())
     return ref.splitk_matvec_ref(a, x)
@@ -54,7 +57,7 @@ def matvec(a: jnp.ndarray, x: jnp.ndarray, use_pallas: bool | None = None
 def conv2d(a: jnp.ndarray, k: jnp.ndarray, tiled: bool = False,
            use_pallas: bool | None = None) -> jnp.ndarray:
     if use_pallas is None:
-        use_pallas = True
+        use_pallas = _on_tpu()
     if not use_pallas:
         return ref.conv2d_shift_ref(a, k)
     fn = conv2d_shift_tiled if tiled else conv2d_shift
@@ -64,7 +67,7 @@ def conv2d(a: jnp.ndarray, k: jnp.ndarray, tiled: bool = False,
 def conv2d_binary(a_packed: jnp.ndarray, k_packed: jnp.ndarray,
                   use_pallas: bool | None = None) -> jnp.ndarray:
     if use_pallas is None:
-        use_pallas = True
+        use_pallas = _on_tpu()
     if use_pallas:
         return binary_conv2d(a_packed, k_packed, interpret=not _on_tpu())
     return ref.binary_conv2d_ref(a_packed, k_packed)

@@ -1,2 +1,32 @@
-from .engine import Engine, Request
-__all__ = ["Engine", "Request"]
+"""Serving layer.
+
+Two services live here:
+
+* :mod:`repro.serve.matpim` — the MatPIM plan-cache service
+  (:class:`PlanService`): bounded compiled-plan reuse plus heterogeneous
+  request batching over the crossbar engine. Imported eagerly (numpy-only).
+* :mod:`repro.serve.engine` — the LLM continuous-batching engine
+  (:class:`Engine`) for the jax model stack. Imported lazily so that
+  ``import repro.serve`` (and the application pipelines that fetch plans
+  through it) stays light: the model stack and jax load only when
+  ``Engine``/``Request`` are actually touched.
+"""
+from .matpim import (CacheStats, PlanService, ServeRequest, Ticket,
+                     bucket_up, get_default_service, reset_default_service)
+
+_LLM_ENGINE = ("Engine", "Request")
+
+
+def __getattr__(name):
+    if name in _LLM_ENGINE:
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")
+
+
+# Engine/Request resolve via __getattr__ but stay OUT of __all__: a
+# `from repro.serve import *` must not eagerly drag in the jax model stack
+__all__ = [
+    "CacheStats", "PlanService", "ServeRequest", "Ticket", "bucket_up",
+    "get_default_service", "reset_default_service",
+]

@@ -1,0 +1,547 @@
+"""Plan-cache serving layer: compiled-plan reuse + heterogeneous batching.
+
+Every MatPIM caller so far hand-builds one plan per operand shape and can
+only batch shape-homogeneous work. This module makes the repo behave like a
+*service* (the PPAC/HIPE-MAGIC view: one accelerator multiplexing many
+matvec-like workloads over a synthesis layer that reuses lowered programs):
+
+* :class:`PlanService` caches compiled+fused plans in a bounded LRU keyed by
+  ``(algorithm, bucket shape, geometry, fuse, backend)`` with hit / miss /
+  eviction stats. Evicted plans also drop their executor memoizations
+  (``CompiledProgram.clear_caches()``), so jitted runners are released
+  instead of leaking under long-lived use.
+* A stream of heterogeneous matvec / conv / binary requests is **bucketed**
+  by plan key: request shapes round up to power-of-two buckets, operands are
+  padded with each algorithm's identity element (zeros for full-precision,
+  +1 for binary — the tiling-layer conventions), and every bucket coalesces
+  onto the bit-plane batch axis of one ``execute_batch`` call. Results
+  scatter back per request (popcounts re-thresholded at the true operand
+  length, conv outputs cropped to the true valid region).
+* Two driving modes: the synchronous ``submit_* / flush`` API runs
+  everything pending, and :meth:`PlanService.run_stream` is a host-side
+  continuous-batching loop mirroring ``serve/engine.py``'s slot model —
+  admit requests until the in-flight unit budget is full, execute the
+  fullest bucket, repeat — with per-request latency-in-cycles and wall-time
+  metrics on every :class:`Ticket`.
+
+Fault models thread through per bucket: requests carrying the same
+:class:`~repro.device.faults.FaultModel` batch together (each crossbar in
+the batch draws an independent realization), and per-request
+:class:`~repro.device.faults.FaultRealization` masks are concatenated along
+the batch axis — explicit per-instance masks make coalesced execution
+bit-identical to sequential per-request execution, in any order.
+
+>>> import numpy as np
+>>> svc = PlanService(rows=64, cols=256, parts=8)
+>>> A = np.ones((3, 10), dtype=int); x = np.ones(10, dtype=int)
+>>> t1 = svc.submit_binary_matvec(A, x)
+>>> t2 = svc.submit_binary_matvec(-A[:2, :9], np.ones(9, dtype=int))
+>>> _ = svc.flush()
+>>> [int(v) for v in t1.result], [int(v) for v in t2.result]
+([1, 1, 1], [-1, -1])
+>>> svc.stats.misses, t1.key == t2.key   # mixed shapes, one bucket plan
+(1, True)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.compile import RunnerCache
+from ..core.tiling import (TiledBinaryMatvec, TiledConv2d, TiledMatvec,
+                           majority_sign)
+from ..device.faults import FaultModel, FaultRealization
+
+
+def bucket_up(v: int, floor: int = 8) -> int:
+    """Round ``v`` up to the service's power-of-two shape buckets.
+
+    >>> bucket_up(3), bucket_up(8), bucket_up(9), bucket_up(100)
+    (8, 8, 16, 128)
+    """
+    return max(floor, 1 << (int(v) - 1).bit_length())
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Plan-cache and batching counters for one :class:`PlanService`."""
+
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    requests: int = 0
+    batches: int = 0       # execute_batch calls issued
+    units: int = 0         # crossbar images executed (batch sizes summed)
+    compile_s: float = 0.0  # wall time spent building/compiling plans (misses)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = self.hit_rate
+        return d
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Handle for one submitted request; filled in when its bucket runs."""
+
+    uid: int
+    kind: str
+    key: tuple                      # plan-cache key the request bucketed to
+    n_units: int                    # crossbar images this request contributes
+    result: object = None
+    cycles: Optional[int] = None    # in-array program cycles (tiles lockstep)
+    reduce_depth: int = 0           # host tree-reduction levels on top
+    wall_s: Optional[float] = None  # wall time of the engine batch serving it
+    batch_units: Optional[int] = None  # crossbars coalesced in that batch
+    queue_steps: int = 0            # serve-loop steps spent waiting
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One element of a request stream for :meth:`PlanService.run_stream`:
+    ``kind`` picks the ``submit_<kind>`` method, ``args``/``kwargs`` are its
+    operands (e.g. ``ServeRequest("binary_matvec", (A, x))``)."""
+
+    kind: str
+    args: tuple
+    kwargs: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: Ticket
+    wrapper: object                 # tiled wrapper (kept alive past eviction)
+    load: Callable                  # load_tile(b, mem) from bind()
+    decode: Callable                # decode_tile(b, mem) from bind()
+    finalize: Callable              # partials -> request result
+    faults: object = None
+    submitted_step: int = 0
+
+
+def _concat_realizations(reals: List[FaultRealization]) -> FaultRealization:
+    """Stack per-request realizations along the batch axis (same trace)."""
+    if len(reals) == 1:
+        return reals[0]
+    return FaultRealization(
+        sa0=np.concatenate([r.sa0 for r in reals]),
+        sa1=np.concatenate([r.sa1 for r in reals]),
+        switch=np.concatenate([r.switch for r in reals]),
+        init_flip=np.concatenate([r.init_flip for r in reals]))
+
+
+class PlanService:
+    """LRU-bounded plan cache + heterogeneous request batcher.
+
+    One service owns one crossbar geometry ``(rows, cols, parts)``, one
+    engine ``backend`` and one ``fuse`` policy; those live in every plan key
+    so distinct configurations never share compiled state. ``max_plans``
+    bounds the cache: the least-recently-used plan is dropped (and its
+    executor caches cleared) past the bound. ``bucket=False`` disables
+    shape bucketing (each exact shape gets its own plan).
+
+    ``tiled()`` is the pipeline-facing fetch: an exact-shape, exact-kwargs
+    cached constructor for the tiled wrappers, shared across stages and
+    pipelines (see ``apps/pipeline.py``).
+    """
+
+    def __init__(self, max_plans: int = 32, backend: str = "numpy",
+                 fuse: bool = True, rows: int = 1024, cols: int = 1024,
+                 parts: int = 32, bucket: bool = True, bucket_floor: int = 8,
+                 max_batch: Optional[int] = None, seed: Optional[int] = 0,
+                 max_starve_steps: int = 4):
+        self.max_plans = int(max_plans)
+        self.fuse = bool(fuse)
+        self.backend = backend
+        if not fuse and backend in ("numpy", "jax"):
+            # honor the unfused policy explicitly; auto would re-fuse
+            self.backend = backend + "-unfused"
+        self.geometry = (int(rows), int(cols), int(parts))
+        self.bucket = bool(bucket)
+        self.bucket_floor = int(bucket_floor)
+        self.max_batch = max_batch
+        self.max_starve_steps = int(max_starve_steps)
+        self.stats = CacheStats()
+        # the same bounded LRU the executors use for their memoization; the
+        # eviction hook releases the evicted plan's jitted runners (any
+        # in-flight request still holds its wrapper and rebuilds lazily)
+        self._plans = RunnerCache(max_entries=self.max_plans,
+                                  on_evict=self._on_plan_evict)
+        self._queue: List[_Pending] = []
+        self._uid = 0
+        self._step = 0
+        self._rng = np.random.default_rng(seed)  # FaultModel sampling stream
+
+    # -- plan cache ----------------------------------------------------------
+
+    def _on_plan_evict(self, wrapper) -> None:
+        wrapper.plan.clear_caches()
+        self.stats.evictions += 1
+
+    def _get_plan(self, key: tuple, factory: Callable):
+        w = self._plans.get(key)       # LRU touch on hit
+        if w is not None:
+            self.stats.hits += 1
+            return w
+        self.stats.misses += 1
+        t0 = time.perf_counter()
+        w = factory()
+        if w.plan.program is not None:
+            w.plan.compile(fuse=self.fuse)   # pay lowering at miss time
+        self.stats.compile_s += time.perf_counter() - t0
+        self._plans[key] = w           # may evict -> _on_plan_evict
+        return w
+
+    def tiled(self, kind: str, *args, key_extra=None, **kw):
+        """Cached tiled-wrapper fetch (exact shapes, no bucketing).
+
+        ``kind`` is ``"matvec"`` / ``"binary_matvec"`` / ``"conv"``; ``args``
+        and ``kw`` go to the wrapper constructor and form the cache key
+        together with ``key_extra`` (pipeline conv stages pass their kernel
+        bytes: a stage binds one kernel for its lifetime, and keying on it
+        is always safe — kernel-*dependent* programs, binary or
+        stream-kernel, must never share a wrapper across kernels). The
+        service's own geometry supplies the ``rows`` / ``cols`` / ``parts``
+        defaults (callers may override per fetch), so the resolved geometry
+        is always part of the key.
+        """
+        factories = {"matvec": TiledMatvec, "binary_matvec": TiledBinaryMatvec,
+                     "conv": TiledConv2d}
+        for name, v in zip(("rows", "cols", "parts"), self.geometry):
+            kw.setdefault(name, v)
+        key = ("tiled", kind, args, key_extra, tuple(sorted(kw.items())),
+               self.fuse, self.backend)
+        return self._get_plan(key, lambda: factories[kind](*args, **kw))
+
+    def cached_keys(self) -> List[tuple]:
+        """Current cache keys, least-recently-used first."""
+        return list(self._plans.keys())
+
+    # -- request submission --------------------------------------------------
+
+    def _bucket2(self, m: int, k: int) -> Tuple[int, int]:
+        if not self.bucket:
+            return int(m), int(k)
+        return (bucket_up(m, self.bucket_floor),
+                bucket_up(k, self.bucket_floor))
+
+    def _ticket(self, kind: str, key: tuple, n_units: int) -> Ticket:
+        self._uid += 1
+        self.stats.requests += 1
+        return Ticket(uid=self._uid, kind=kind, key=key, n_units=n_units)
+
+    def _enqueue(self, ticket, wrapper, load, decode, finalize, faults):
+        if isinstance(faults, FaultRealization) \
+                and faults.batch != ticket.n_units:
+            raise ValueError(
+                f"FaultRealization batch {faults.batch} != the request's "
+                f"{ticket.n_units} crossbar units; sample it per request "
+                f"(n_cycles/W/I of wrapper.plan.compile())")
+        self._queue.append(_Pending(
+            ticket=ticket, wrapper=wrapper, load=load, decode=decode,
+            finalize=finalize, faults=faults, submitted_step=self._step))
+        return ticket
+
+    def submit(self, kind: str, *args, **kw) -> Ticket:
+        """Dispatch to ``submit_<kind>`` (the :class:`ServeRequest` path)."""
+        return getattr(self, f"submit_{kind}")(*args, **kw)
+
+    def submit_binary_matvec(self, A: np.ndarray, x: np.ndarray,
+                             faults=None) -> Ticket:
+        """±1 matvec ``y = sign(A @ x)``; result is the (m,) sign vector."""
+        A = np.asarray(A)
+        x = np.asarray(x)
+        m, k = A.shape
+        assert x.shape == (k,)
+        Mb, Kb = self._bucket2(m, k)
+        rows, cols, parts = self.geometry
+        key = ("binary_matvec", (Mb, Kb), self.geometry, self.fuse,
+               self.backend)
+        w = self._get_plan(key, lambda: TiledBinaryMatvec(
+            Mb, Kb, rows=rows, cols=cols, parts=parts))
+        # bucket padding with the binary identity: +1 rows/cols each add one
+        # XNOR match per row, subtracted before the host-side sign below
+        Ap = np.ones((Mb, Kb), dtype=np.int64)
+        Ap[:m, :k] = A
+        xp = np.ones(Kb, dtype=np.int64)
+        xp[:k] = x
+        load, decode, fin = w.bind(Ap, xp)
+        pad_k = Kb - k
+
+        def finalize(partials):
+            pop, depth = fin(partials)      # bucket-length popcounts
+            return majority_sign(pop[:m] - pad_k, k), depth
+
+        return self._enqueue(self._ticket("binary_matvec", key, w.n_tiles),
+                             w, load, decode, finalize, faults)
+
+    def submit_matvec(self, A: np.ndarray, x: np.ndarray, N: int,
+                      faults=None) -> Ticket:
+        """Full-precision ``y = A @ x mod 2^(2N)`` (N-bit operands)."""
+        A = np.asarray(A)
+        x = np.asarray(x)
+        m, k = A.shape
+        assert x.shape == (k,)
+        Mb, Kb = self._bucket2(m, k)
+        rows, cols, parts = self.geometry
+        key = ("matvec", (Mb, Kb), int(N), self.geometry, self.fuse,
+               self.backend)
+        w = self._get_plan(key, lambda: TiledMatvec(
+            Mb, Kb, N, rows=rows, cols=cols, parts=parts))
+        Ap = np.zeros((Mb, Kb), dtype=np.int64)   # zero-pad: adds 0 mod 2^2N
+        Ap[:m, :k] = A
+        xp = np.zeros(Kb, dtype=np.int64)
+        xp[:k] = x
+        load, decode, fin = w.bind(Ap, xp)
+
+        def finalize(partials):
+            y, depth = fin(partials)
+            return y[:m], depth
+
+        return self._enqueue(self._ticket("matvec", key, w.n_tiles),
+                             w, load, decode, finalize, faults)
+
+    def _submit_conv(self, kind: str, img: np.ndarray, K: np.ndarray,
+                     N: int, binary: bool, faults) -> Ticket:
+        img = np.asarray(img)
+        K = np.asarray(K, dtype=np.int64)
+        H, Wd = img.shape
+        k = K.shape[0]
+        assert K.shape == (k, k)
+        assert H >= k and Wd >= k, "image smaller than the kernel"
+        Hb, Wb = self._bucket2(H, Wd)
+        Hb, Wb = max(Hb, k), max(Wb, k)
+        rows, cols, parts = self.geometry
+        tile_kw = {"tile_n": 64} if binary else {}  # cf. tiled_binary_conv2d
+        # the kernel joins the cache key only when the lowered program
+        # actually depends on it (binary taps are baked into gates; the
+        # full-precision plan specializes only in the stream-kernel
+        # fallback). Kernel-independent plans serve EVERY kernel of the
+        # shape: requests with distinct kernels share one compiled plan and
+        # coalesce into one batch (each tile loads its own kernel as data).
+        # The probe constructor is cheap — programs build lazily below.
+        probe = TiledConv2d(Hb, Wb, k, N, binary=binary, rows=rows,
+                            cols=cols, parts=parts, **tile_kw)
+        kernel_dep = (binary or probe.plan.specialize
+                      or probe.plan.stream_kernel)
+        key = (kind, (Hb, Wb), k, int(N),
+               K.tobytes() if kernel_dep else None, self.geometry,
+               self.fuse, self.backend)
+
+        def factory():
+            probe.plan.ensure_program(K)   # program build lands in compile_s
+            return probe
+
+        w = self._get_plan(key, factory)
+        # pad bottom/right with the operand identity (+1 binary, 0 full-
+        # precision); the true valid region [0:H-k+1, 0:W-k+1] only reads
+        # real pixels, so cropping it back is exact
+        pad_val = 1 if binary else 0
+        imgp = np.full((Hb, Wb), pad_val, dtype=np.int64)
+        imgp[:H, :Wd] = img
+        load, decode, fin = w.bind(imgp, K)
+        oh, ow = H - k + 1, Wd - k + 1
+
+        def finalize(tiles):
+            out, depth = fin(tiles)
+            return out[:oh, :ow], depth
+
+        return self._enqueue(self._ticket(kind, key, w.n_tiles),
+                             w, load, decode, finalize, faults)
+
+    def submit_conv(self, img: np.ndarray, K: np.ndarray, N: int,
+                    faults=None) -> Ticket:
+        """Full-precision valid 2D correlation mod 2^N (negative taps ride
+        two's-complement encoding; decode with ``apps.pipeline
+        .decode_signed``). Result is the (H-k+1, W-k+1) raw map."""
+        return self._submit_conv("conv", img, K, N, binary=False,
+                                 faults=faults)
+
+    def submit_binary_conv(self, img: np.ndarray, K: np.ndarray,
+                           faults=None) -> Ticket:
+        """±1-kernel binary conv (§III-C); result is the ±1 sign map."""
+        assert set(np.unique(np.asarray(K))) <= {-1, 1}
+        return self._submit_conv("binary_conv", img, K, N=1, binary=True,
+                                 faults=faults)
+
+    # -- execution -----------------------------------------------------------
+
+    @property
+    def pending_units(self) -> int:
+        return sum(p.ticket.n_units for p in self._queue)
+
+    @staticmethod
+    def _exec_key(p: _Pending) -> tuple:
+        # requests coalesce only when they share the plan AND a compatible
+        # fault specification: same FaultModel instances batch together
+        # (independent per-crossbar draws), explicit realizations batch
+        # with each other (masks concatenate), ideal runs with ideal
+        if p.faults is None:
+            f = ("ideal",)
+        elif isinstance(p.faults, FaultRealization):
+            f = ("realization",)
+        else:
+            f = ("model", p.faults)
+        return (p.ticket.key, f)
+
+    def _buckets(self) -> "OrderedDict[tuple, List[_Pending]]":
+        out: "OrderedDict[tuple, List[_Pending]]" = OrderedDict()
+        for p in self._queue:
+            out.setdefault(self._exec_key(p), []).append(p)
+        return out
+
+    def _run_bucket(self, pends: List[_Pending]) -> List[Ticket]:
+        """Coalesce one bucket onto the engine batch axis and scatter back."""
+        w = pends[0].wrapper
+        plan = w.plan
+        units = sum(p.ticket.n_units for p in pends)
+        mems = np.zeros((units, plan.rows, plan.cols), dtype=np.uint8)
+        off = 0
+        for p in pends:
+            for b in range(p.ticket.n_units):
+                p.load(b, mems[off + b])
+            off += p.ticket.n_units
+        faults = rng = None
+        if pends[0].faults is not None:
+            if isinstance(pends[0].faults, FaultRealization):
+                faults = _concat_realizations([p.faults for p in pends])
+            else:
+                faults, rng = pends[0].faults, self._rng
+        t0 = time.perf_counter()
+        res = plan.execute_batch(mems, backend=self.backend,
+                                 max_batch=self.max_batch, faults=faults,
+                                 rng=rng)
+        wall = time.perf_counter() - t0
+        done = []
+        off = 0
+        for p in pends:
+            partials = [p.decode(b, res.mem[off + b])
+                        for b in range(p.ticket.n_units)]
+            off += p.ticket.n_units
+            t = p.ticket
+            t.result, t.reduce_depth = p.finalize(partials)
+            t.cycles = res.cycles
+            t.wall_s = wall
+            t.batch_units = units
+            # steps the request sat queued before the one that served it
+            t.queue_steps = max(0, self._step - p.submitted_step - 1)
+            t.done = True
+            done.append(t)
+            self._queue.remove(p)
+        self.stats.batches += 1
+        self.stats.units += units
+        return done
+
+    def flush(self) -> List[Ticket]:
+        """Run every pending request, one coalesced batch per bucket."""
+        done = []
+        while self._queue:
+            self._step += 1
+            buckets = self._buckets()
+            done.extend(self._run_bucket(next(iter(buckets.values()))))
+        return done
+
+    def step(self, max_units: Optional[int] = None) -> List[Ticket]:
+        """One serve-loop step: execute the fullest bucket (up to
+        ``max_units`` crossbar images), leave the rest queued.
+
+        Anti-starvation aging: fullest-first alone lets a sustained popular
+        stream starve minority buckets forever, so a bucket whose oldest
+        request has waited ``max_starve_steps`` steps is served first
+        (oldest such bucket wins), bounding every request's queue delay.
+        """
+        if not self._queue:
+            return []
+        self._step += 1
+        buckets = self._buckets().values()
+
+        def age(ps):
+            return self._step - min(p.submitted_step for p in ps)
+
+        starved = [ps for ps in buckets if age(ps) > self.max_starve_steps]
+        if starved:
+            pends = max(starved, key=age)
+        else:
+            pends = max(buckets,
+                        key=lambda ps: sum(p.ticket.n_units for p in ps))
+        if max_units is not None:
+            take, acc = [], 0
+            for p in pends:
+                if take and acc + p.ticket.n_units > max_units:
+                    break
+                take.append(p)
+                acc += p.ticket.n_units
+            pends = take
+        return self._run_bucket(pends)
+
+    def run_stream(self, requests: Iterable[ServeRequest], slots: int = 64,
+                   max_units: Optional[int] = None) -> List[Ticket]:
+        """Continuous-batching loop over a request stream.
+
+        Mirrors the slot model of ``serve/engine.py``: admit requests until
+        ``slots`` crossbar units are in flight, execute the fullest bucket
+        (:meth:`step`), repeat until the stream and the queue drain. Every
+        returned ticket carries its latency in cycles, the wall time and
+        size of the batch that served it, and how many steps it queued.
+        """
+        if slots < 1:
+            raise ValueError(f"slots={slots}: need at least one in-flight "
+                             f"crossbar unit to admit work")
+        it = iter(requests)
+        exhausted = False
+        tickets: List[Ticket] = []
+        while True:
+            while not exhausted and self.pending_units < slots:
+                try:
+                    r = next(it)
+                except StopIteration:
+                    exhausted = True
+                    break
+                tickets.append(self.submit(r.kind, *r.args, **r.kwargs))
+            if not self._queue:
+                if exhausted:
+                    break
+                continue
+            self.step(max_units=max_units or slots)
+        return tickets
+
+
+# ---------------------------------------------------------------------------
+# Shared default service (the pipeline layer's plan source)
+# ---------------------------------------------------------------------------
+
+_DEFAULT: Optional[PlanService] = None
+
+
+def get_default_service() -> PlanService:
+    """Process-wide shared :class:`PlanService` that application pipelines
+    compile through by default — stages with the same shape/geometry reuse
+    one compiled plan instead of private recompiles."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = PlanService(max_plans=64)
+    return _DEFAULT
+
+
+def reset_default_service() -> None:
+    """Drop the shared service (tests; releases all cached plans)."""
+    global _DEFAULT
+    if _DEFAULT is not None:
+        for w in list(_DEFAULT._plans.values()):
+            w.plan.clear_caches()
+    _DEFAULT = None
+
+
+__all__ = [
+    "CacheStats", "PlanService", "ServeRequest", "Ticket", "bucket_up",
+    "get_default_service", "reset_default_service",
+]

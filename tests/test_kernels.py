@@ -160,3 +160,49 @@ def test_binary_conv2d(H, W, C, k):
                                a[v:H - k + 1 + v, h:W - k + 1 + h, :],
                                kk[v, h, :]).astype(np.int32)
     np.testing.assert_array_equal(np.asarray(want), dense)
+
+
+# -- dispatch defaults -----------------------------------------------------------
+
+
+def test_ops_default_dispatches_to_ref_off_tpu(monkeypatch):
+    """Regression: the public wrappers used to default to the Pallas path
+    even off-TPU, where kernels run under interpret=True and are far slower
+    than the jnp ``ref`` fallbacks. Off-TPU the default must be ``ref``;
+    ``use_pallas=True`` still forces the Pallas path."""
+    from repro.kernels import ops
+
+    assert not ops._on_tpu()
+
+    def boom(*a, **k):
+        raise AssertionError("Pallas path taken by default off-TPU")
+
+    monkeypatch.setattr(ops, "binary_matmul", boom)
+    monkeypatch.setattr(ops, "splitk_matvec", boom)
+    monkeypatch.setattr(ops, "conv2d_shift", boom)
+    monkeypatch.setattr(ops, "conv2d_shift_tiled", boom)
+    monkeypatch.setattr(ops, "binary_conv2d", boom)
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.choice([-1, 1], (4, 64)), jnp.float32)
+    wp = ref.pack_bits(jnp.asarray(rng.choice([-1, 1], (8, 64)), jnp.float32))
+    assert ops.binary_dense(x, wp, 64).shape == (4, 8)
+
+    a = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal(32), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.matvec(a, v)),
+                               np.asarray(a) @ np.asarray(v),
+                               rtol=1e-4, atol=1e-4)
+
+    img = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((3, 3)), jnp.float32)
+    assert ops.conv2d(img, kk).shape == (6, 6)
+
+    ac = rng.choice([-1, 1], size=(8, 8, 32)).astype(np.float32)
+    kc = rng.choice([-1, 1], size=(3, 3, 32)).astype(np.float32)
+    ap = ref.pack_bits(jnp.asarray(ac), axis=-1)
+    kp = ref.pack_bits(jnp.asarray(kc), axis=-1)
+    assert ops.conv2d_binary(ap, kp).shape == (6, 6)
+
+    with pytest.raises(AssertionError, match="Pallas path"):
+        ops.matvec(a, v, use_pallas=True)
