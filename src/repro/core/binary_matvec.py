@@ -200,6 +200,10 @@ class BinaryMatvecPlan(CrossbarPlan):
 
     # -- driver ---------------------------------------------------------------
 
+    def pallas_spec(self):
+        from .pallas_exec import binary_matvec_spec
+        return binary_matvec_spec(self)
+
     def load_into(self, mem: np.ndarray, A: np.ndarray, x: np.ndarray) -> None:
         """Write ±1 operands into a (rows, cols) crossbar image."""
         m, n, P, npp, cp = self.m, self.n, self.P, self.npp, self.cp

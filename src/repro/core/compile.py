@@ -210,6 +210,9 @@ class CompiledProgram:
 
     def __post_init__(self):
         self._caches = RunnerCache()  # executor-private memoization (bounded)
+        # layout manifest for the pallas backend; algorithm plans attach one
+        # at compile time (see plan.CrossbarPlan.compile / core.pallas_exec)
+        self.pallas_spec = None
 
     def clear_caches(self) -> None:
         """Release every memoized executor artifact (replay plans, jitted

@@ -207,6 +207,10 @@ class ConvPlan(CrossbarPlan):
 
     # -- driver ---------------------------------------------------------------
 
+    def pallas_spec(self):
+        from .pallas_exec import conv_spec
+        return conv_spec(self)
+
     def ensure_program(self, K: np.ndarray) -> Program:
         """(Re)build the program if missing or specialized to a different K."""
         k_dependent = self.specialize or self.stream_kernel

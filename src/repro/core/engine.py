@@ -85,30 +85,59 @@ def have_jax() -> bool:
 
 
 def available_backends() -> tuple:
-    """Backends ``execute`` accepts for compiled traces (auto variants; the
-    explicit ``-fused``/``-unfused`` forms are accepted too). ``CrossbarPlan``
-    methods additionally accept ``"interp"`` (the uncompiled interpreter)."""
-    return ("numpy", "jax") if have_jax() else ("numpy",)
+    """The real set of backends ``execute`` accepts for compiled traces.
+
+    ``"auto"`` resolves per ``(program key, batch bucket)`` from the tunings
+    table (measured) or a conservative heuristic; ``"numpy"``/``"jax"`` pick
+    fused-vs-unfused from the trace alone; the ``-fused``/``-unfused`` forms
+    force a variant; ``"pallas"`` lowers eligible traces onto the
+    ``repro.kernels`` Pallas kernels and falls back otherwise.
+    ``CrossbarPlan`` methods additionally accept ``"interp"`` (the uncompiled
+    interpreter), which is plan-level only.
+
+    >>> bs = available_backends()
+    >>> ("auto" in bs, "numpy-fused" in bs, "numpy-unfused" in bs)
+    (True, True, True)
+    >>> ("jax" in bs) == ("pallas" in bs)  # both need jax
+    True
+    """
+    base = ("auto", "numpy", "numpy-fused", "numpy-unfused")
+    if have_jax():
+        base += ("jax", "jax-fused", "jax-unfused", "pallas")
+    return base
 
 
 def parse_backend(backend: str) -> tuple:
-    """``backend`` → ``(base, variant)`` with base in {numpy, jax} and
-    variant in {auto, fused, unfused}.
+    """``backend`` → ``(base, variant)`` with base in
+    {auto, numpy, jax, pallas} and variant in {auto, fused, unfused}.
 
     >>> parse_backend("numpy"), parse_backend("jax-fused")
     (('numpy', 'auto'), ('jax', 'fused'))
+    >>> parse_backend("auto"), parse_backend("pallas")
+    (('auto', 'auto'), ('pallas', 'auto'))
+    >>> parse_backend("interp")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown engine backend 'interp'; compiled traces support \
+'auto', 'numpy', 'numpy-fused', 'numpy-unfused', 'jax', 'jax-fused', \
+'jax-unfused', 'pallas' ('interp' is plan-level only: use \
+CrossbarPlan.execute)
     """
     base, variant = backend, "auto"
     if backend.endswith("-fused"):
         base, variant = backend[:-len("-fused")], "fused"
     elif backend.endswith("-unfused"):
         base, variant = backend[:-len("-unfused")], "unfused"
-    if base not in ("numpy", "jax"):
-        # "interp" is a plan-level backend (CrossbarPlan.execute/_batch):
-        # a compiled trace alone cannot be interpreted
+    if base not in ("numpy", "jax") and not (
+            base in ("auto", "pallas") and variant == "auto"):
+        # enumerate the full spelling set, not just what this host can run:
+        # a clear error beats hiding 'jax'/'pallas' on a cpu-only box
+        known = ("'auto', 'numpy', 'numpy-fused', 'numpy-unfused', 'jax', "
+                 "'jax-fused', 'jax-unfused', 'pallas'")
         raise ValueError(
             f"unknown engine backend {backend!r}; compiled traces support "
-            f"'numpy' and 'jax' plus '-fused'/'-unfused' variants")
+            f"{known} ('interp' is plan-level only: use "
+            f"CrossbarPlan.execute)")
     return base, variant
 
 
@@ -556,6 +585,7 @@ def execute(
     max_batch: Optional[int] = None,
     faults=None,
     rng=None,
+    tunings=None,
 ) -> EngineResult:
     """Replay ``cp`` over a batch of crossbars.
 
@@ -586,6 +616,20 @@ def execute(
     The fault machinery runs even for the ideal all-zero model —
     bit-identity with ``faults=None`` is a property-tested guarantee, not a
     shortcut — and never adds cycles: faults perturb state, not schedules.
+
+    Two meta-backends layer on top of the four concrete paths.
+    ``backend="auto"`` resolves a concrete backend (and optionally a
+    span-chunking ``max_batch``) per ``(program key, batch bucket)`` from
+    the autotuner's tunings table — ``tunings`` (a
+    :class:`repro.core.autotune.TuningTable`) overrides the process default
+    — falling back to a conservative heuristic when nothing is measured;
+    the result's ``backend`` field records the choice as
+    ``"auto:<resolved>"``. ``backend="pallas"`` lowers traces that carry a
+    plan-attached ``pallas_spec`` (binary matvec, encoded matvec, conv)
+    onto the ``repro.kernels`` Pallas kernels — interpret-mode off-TPU,
+    Mosaic on TPU — and transparently falls back to jax/numpy for
+    ineligible programs or fault runs (``backend`` field
+    ``"pallas:fallback-<base>"``).
     """
     from .fused import (build_jax_fused, build_jax_fused_real,
                         jax_fuse_eligible, run_numpy_fused, schedule_for)
@@ -597,6 +641,26 @@ def execute(
     mem = np.ascontiguousarray(mem, dtype=np.uint8)
 
     base, variant = parse_backend(backend)
+    label = backend
+    if base == "auto":
+        from .autotune import resolve_auto
+        resolved, mb, _src = resolve_auto(cp, mem.shape[0], faults=faults,
+                                          table=tunings)
+        base, variant = parse_backend(resolved)
+        if max_batch is None and mb is not None:
+            max_batch = mb
+        label = (f"auto:{resolved}@{mb}" if mb is not None
+                 else f"auto:{resolved}")
+    elif base == "pallas":
+        from .pallas_exec import pallas_eligible, run_pallas
+        if pallas_eligible(cp, faults):
+            out = run_pallas(cp, mem)
+            if squeeze:
+                out = out[0]
+            return EngineResult(mem=out, cycles=cp.n_cycles,
+                                stats=dict(cp.stats), backend="pallas")
+        base, variant = ("jax", "auto") if have_jax() else ("numpy", "auto")
+        label = f"pallas:fallback-{base}"
     if base == "jax" and not have_jax():
         raise RuntimeError("jax backend requested but jax is not installed")
     word = 64 if base == "numpy" else JAX_WORD_BITS
@@ -652,4 +716,4 @@ def execute(
     if squeeze:
         out = out[0]
     return EngineResult(mem=out, cycles=cp.n_cycles, stats=dict(cp.stats),
-                        backend=backend, faults=faults)
+                        backend=label, faults=faults)

@@ -132,6 +132,10 @@ class MatvecPlan(CrossbarPlan):
 
     # -- driver ---------------------------------------------------------------
 
+    def pallas_spec(self):
+        from .pallas_exec import matvec_spec
+        return matvec_spec(self)
+
     def load_into(self, mem: np.ndarray, A: np.ndarray, x: np.ndarray) -> None:
         """Write operand bits into a (rows, cols) crossbar image."""
         m, n, N, nb = self.m, self.n, self.N, self.nb

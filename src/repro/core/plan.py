@@ -74,16 +74,28 @@ class CrossbarPlan:
                 prog, self.rows, self.cols, self.parts, self.parts,
                 validate=validate, fuse=fuse)
             self._compiled_src = prog
+            self._compiled.pallas_spec = self.pallas_spec()
         elif fuse and self._compiled.schedule is None:
             from .compile import fuse_program
             self._compiled.schedule = fuse_program(self._compiled)
         elif not fuse and self._compiled.schedule is not None:
             # honor the explicit request for an unfused trace without
             # clobbering the fused cache other callers rely on
-            return compile_program(
+            cp = compile_program(
                 prog, self.rows, self.cols, self.parts, self.parts,
                 validate=validate, fuse=False)
+            cp.pallas_spec = self.pallas_spec()
+            return cp
         return self._compiled
+
+    def pallas_spec(self):
+        """Layout manifest for the pallas executor backend, or ``None``.
+
+        Algorithm plans that the ``repro.kernels`` tri can compute override
+        this (see ``core.pallas_exec``); the default keeps arbitrary
+        programs on the replay backends.
+        """
+        return None
 
     @property
     def cycles(self) -> int:
@@ -182,6 +194,7 @@ class CrossbarPlan:
         max_batch: Optional[int] = None,
         faults=None,
         rng=None,
+        tunings=None,
     ) -> EngineResult:
         """Run this plan's program over ``(B, rows, cols)`` crossbars at once.
 
@@ -203,4 +216,5 @@ class CrossbarPlan:
             return EngineResult(mem=out, cycles=xb.cycles,
                                 stats=dict(xb.stats), backend="interp")
         return execute(self.compile(), mems, backend=backend,
-                       max_batch=max_batch, faults=faults, rng=rng)
+                       max_batch=max_batch, faults=faults, rng=rng,
+                       tunings=tunings)

@@ -13,6 +13,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .binary_matmul import binary_matmul
@@ -26,6 +27,43 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def as_packed_words(w) -> jnp.ndarray:
+    """Reinterpret a packed-bit word array as the uint32 words kernels take.
+
+    The simulator packs bits into whatever unsigned word width fits the
+    batch (``core.engine._pack``: uint8/16/32/64); the Pallas kernels
+    consume uint32 lanes. Feeding a uint64 array straight to ``jnp.asarray``
+    under disabled x64 silently truncates to 32 bits — half the packed bits
+    vanish without an error. This helper instead *views* the underlying
+    bytes as little-endian uint32 (bit k of the wide word stays bit k of
+    the word stream), so any unsigned width is accepted with zero copies on
+    the hot path and no repack.
+
+    Signed arrays are rejected outright: an int32/int64 "packed" array is
+    almost always an accidental upcast, and reinterpreting sign bits as
+    payload would corrupt popcounts silently.
+    """
+    if isinstance(w, jnp.ndarray):
+        if w.dtype == jnp.uint32:
+            return w
+        w = np.asarray(w)
+    arr = np.asarray(w)
+    if arr.dtype == np.uint32:
+        return jnp.asarray(arr)
+    if arr.dtype.kind != "u":
+        raise TypeError(
+            f"packed words must be unsigned (uint8/16/32/64), got "
+            f"{arr.dtype}; an int32/int64 array here usually means an "
+            f"accidental repack — view/cast it as unsigned upstream")
+    if arr.ndim == 0 or (arr.shape[-1] * arr.dtype.itemsize) % 4:
+        raise ValueError(
+            f"last axis of {arr.dtype} shape {arr.shape} is not a whole "
+            f"number of 32-bit words")
+    le = np.ascontiguousarray(arr.astype(arr.dtype.newbyteorder("<"),
+                                         copy=False))
+    return jnp.asarray(le.view(np.dtype("<u4")))
+
+
 def binary_dense(x: jnp.ndarray, w_packed: jnp.ndarray, K: int,
                  use_pallas: bool | None = None) -> jnp.ndarray:
     """±1 dense layer: x (..., K) real → sign-binarized → XNOR-GEMM vs packed
@@ -36,6 +74,7 @@ def binary_dense(x: jnp.ndarray, w_packed: jnp.ndarray, K: int,
     lead = x.shape[:-1]
     x2 = x.reshape(-1, K)
     xp = pack_bits(x2, axis=-1)
+    w_packed = as_packed_words(w_packed)
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
@@ -66,6 +105,8 @@ def conv2d(a: jnp.ndarray, k: jnp.ndarray, tiled: bool = False,
 
 def conv2d_binary(a_packed: jnp.ndarray, k_packed: jnp.ndarray,
                   use_pallas: bool | None = None) -> jnp.ndarray:
+    a_packed = as_packed_words(a_packed)
+    k_packed = as_packed_words(k_packed)
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:

@@ -158,13 +158,27 @@ class PlanService:
                  fuse: bool = True, rows: int = 1024, cols: int = 1024,
                  parts: int = 32, bucket: bool = True, bucket_floor: int = 8,
                  max_batch: Optional[int] = None, seed: Optional[int] = 0,
-                 max_starve_steps: int = 4):
+                 max_starve_steps: int = 4, tunings=None,
+                 autotune: Optional[bool] = None):
         self.max_plans = int(max_plans)
         self.fuse = bool(fuse)
         self.backend = backend
-        if not fuse and backend in ("numpy", "jax"):
+        if not fuse and backend in ("numpy", "jax", "auto"):
             # honor the unfused policy explicitly; auto would re-fuse
-            self.backend = backend + "-unfused"
+            base = "numpy" if backend == "auto" else backend
+            self.backend = base + "-unfused"
+        # backend="auto": consult + refresh the autotuner's tunings table per
+        # (program, batch-bucket). ``tunings`` pins a specific TuningTable
+        # (tests, benches); None uses the process default ($MATPIM_TUNINGS).
+        # ``autotune`` (default: on iff backend == "auto") additionally
+        # micro-tunes COLD (program, bucket) pairs inline: the first batch of
+        # that shape times the real candidate variants (see
+        # core.autotune.autotune_execute) so every later batch in the stream
+        # runs the measured-fastest variant; tuning entries are keyed by
+        # trace content, so plan-cache eviction never orphans them.
+        self.tunings = tunings
+        self._auto = self.backend == "auto"
+        self.autotune = self._auto if autotune is None else bool(autotune)
         self.geometry = (int(rows), int(cols), int(parts))
         self.bucket = bool(bucket)
         self.bucket_floor = int(bucket_floor)
@@ -399,6 +413,41 @@ class PlanService:
             out.setdefault(self._exec_key(p), []).append(p)
         return out
 
+    def _execute_bucket(self, plan, mems: np.ndarray, faults, rng):
+        """One engine call for a coalesced bucket; the autotuner's
+        observation point when the service runs ``backend="auto"``.
+
+        Cold ``(program key, batch bucket)`` pairs (no tunings entry yet) are
+        micro-tuned inline on the real batch — the winning candidate's result
+        is the bucket's result, so the probe replays are the only overhead,
+        paid once per pair and persisted. Warm pairs execute the measured
+        variant and fold their wall time back into the (in-memory) table, so
+        a drifting machine re-converges without an explicit re-tune.
+        """
+        if self._auto and faults is None:
+            from ..core import autotune as at
+            cp = plan.compile(fuse=self.fuse)
+            table = (self.tunings if self.tunings is not None
+                     else at.get_default_table())
+            key = at.program_key(cp)
+            bucket = at.batch_bucket(mems.shape[0])
+            if self.autotune and table.lookup(key, bucket) is None:
+                res, _ = at.autotune_execute(cp, mems, table, cheap=True)
+                return res
+            t0 = time.perf_counter()
+            res = plan.execute_batch(mems, backend=self.backend,
+                                     max_batch=self.max_batch, tunings=table)
+            us = (time.perf_counter() - t0) * 1e6
+            resolved = res.backend
+            if resolved.startswith("auto:"):
+                resolved, _, mb = resolved[len("auto:"):].partition("@")
+                table.observe(key, bucket, resolved, us,
+                              max_batch=int(mb) if mb else None)
+            return res
+        return plan.execute_batch(mems, backend=self.backend,
+                                  max_batch=self.max_batch, faults=faults,
+                                  rng=rng, tunings=self.tunings)
+
     def _run_bucket(self, pends: List[_Pending]) -> List[Ticket]:
         """Coalesce one bucket onto the engine batch axis and scatter back."""
         w = pends[0].wrapper
@@ -417,9 +466,7 @@ class PlanService:
             else:
                 faults, rng = pends[0].faults, self._rng
         t0 = time.perf_counter()
-        res = plan.execute_batch(mems, backend=self.backend,
-                                 max_batch=self.max_batch, faults=faults,
-                                 rng=rng)
+        res = self._execute_bucket(plan, mems, faults, rng)
         wall = time.perf_counter() - t0
         done = []
         off = 0

@@ -1,0 +1,304 @@
+"""Batch-aware backend autotuner: persistence, resolution, and serving.
+
+Covers the tunings-table contract end to end: disk round-trip through the
+atomic save path, corrupt / schema-stale files degrading to the heuristic
+(never failing an execute), measured entries winning over the heuristic in
+``resolve_auto``, ``observe()`` keep-fastest folding, the ``engine.execute``
+``backend="auto"`` label contract, and the ``PlanService`` integration —
+cold buckets micro-tune inline, warm buckets refresh the table, and
+plan-cache eviction does not orphan tuning entries (the keys are
+content-derived, so a recompiled plan maps back to the same row).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import BinaryMatvecPlan
+from repro.core import autotune as at
+from repro.core.engine import execute, have_jax
+from repro.core.fused import jax_fuse_eligible
+from repro.serve.matpim import PlanService
+
+GEOM = dict(rows=64, cols=256, parts=8)
+
+
+def _bmv_fixture(seed=0, m=4, n=16):
+    rng = np.random.default_rng(seed)
+    plan = BinaryMatvecPlan(m, n, **GEOM)
+    A = rng.choice([-1, 1], size=(m, n))
+    x = rng.choice([-1, 1], size=n)
+    mem = np.zeros((plan.rows, plan.cols), dtype=np.uint8)
+    plan.load_into(mem, A, x)
+    return plan, mem, A, x
+
+
+def _bmv_oracle(A, x):
+    return np.where(A @ x >= 0, 1, -1)
+
+
+# ---------------------------------------------------------------------------
+# TuningTable persistence
+# ---------------------------------------------------------------------------
+
+
+def test_table_roundtrip(tmp_path):
+    p = tmp_path / "nested" / "tunings.json"   # save() must mkdir parents
+    t = at.TuningTable(p)
+    t.record("k1", 1, "jax-fused", 123.5)
+    t.record("k1", 64, "numpy-unfused", 88.0, max_batch=at.CHUNK_BATCH)
+    t.record("k2", 32, "numpy-fused", 5.0, source="heuristic")
+    t.save()
+
+    r = at.TuningTable(p)
+    assert len(r) == 3 and r.load_error is None
+    e = r.lookup("k1", 1)
+    assert (e.backend, e.us, e.max_batch, e.source) == \
+        ("jax-fused", 123.5, None, "measured")
+    e = r.lookup("k1", 64)
+    assert (e.backend, e.max_batch) == ("numpy-unfused", at.CHUNK_BATCH)
+    assert r.lookup("k2", 32).source == "heuristic"
+    assert r.lookup("k1", 2) is None
+    # the file itself is schema-tagged, valid JSON
+    d = json.loads(p.read_text())
+    assert d["schema"] == at.SCHEMA and len(d["entries"]) == 3
+
+
+def test_missing_file_is_empty_not_error(tmp_path):
+    t = at.TuningTable(tmp_path / "absent.json")
+    assert len(t) == 0 and t.load_error is None
+
+
+@pytest.mark.parametrize("payload", [
+    "{ not json",                                          # corrupt
+    json.dumps({"schema": 0, "entries": {}}),              # stale schema
+    json.dumps({"schema": at.SCHEMA}),                     # missing entries
+])
+def test_corrupt_or_stale_table_degrades_to_heuristic(tmp_path, payload):
+    p = tmp_path / "tunings.json"
+    p.write_text(payload)
+    t = at.TuningTable(p)
+    assert len(t) == 0 and t.load_error is not None
+
+    plan, mem, A, x = _bmv_fixture()
+    cp = plan.compile()
+    be, mb, source = at.resolve_auto(cp, 1, table=t)
+    assert source == "heuristic"
+    # and the execute still runs (and is correct) against the broken table
+    res = execute(cp, mem, backend="auto", tunings=t)
+    assert res.backend == f"auto:{be}"
+    assert np.array_equal(plan.decode_y(res.mem), _bmv_oracle(A, x))
+
+
+def test_unrunnable_entry_falls_back_to_heuristic():
+    plan, _, _, _ = _bmv_fixture()
+    cp = plan.compile()
+    t = at.TuningTable()
+    t.record(at.program_key(cp), 1, "torch-fused", 1.0)  # not a backend
+    be, _, source = at.resolve_auto(cp, 1, table=t)
+    assert source == "heuristic" and be != "torch-fused"
+
+
+# ---------------------------------------------------------------------------
+# Resolution: heuristic + measured entries + fault runs
+# ---------------------------------------------------------------------------
+
+
+def test_heuristic_rules():
+    plan, _, _, _ = _bmv_fixture()
+    cp = plan.compile()
+    # wide batch (> one jax word): per-cycle numpy replay
+    assert at.heuristic(cp, 64) == ("numpy-unfused", None)
+    assert at.heuristic(cp, 33) == ("numpy-unfused", None)
+    # narrow batch on a fuse-friendly trace: jax-fused when jax is present
+    want = ("jax-fused" if have_jax() and jax_fuse_eligible(cp)
+            else "numpy-fused")
+    assert at.heuristic(cp, 1) == (want, None)
+    # no fusion schedule at all: nothing fused to run
+    cp_uf = plan.compile(fuse=False)
+    assert cp_uf.schedule is None
+    assert at.heuristic(cp_uf, 1) == ("numpy-unfused", None)
+
+
+def test_resolve_auto_prefers_measured_entry():
+    plan, _, _, _ = _bmv_fixture()
+    cp = plan.compile()
+    t = at.TuningTable()
+    key = at.program_key(cp)
+    t.record(key, 1, "numpy-unfused", 7.0, max_batch=None)
+    assert at.resolve_auto(cp, 1, table=t) == ("numpy-unfused", None,
+                                               "measured")
+    # other buckets are not covered by that entry
+    assert at.resolve_auto(cp, 64, table=t)[2] == "heuristic"
+    # fault runs never consult the table
+    assert at.resolve_auto(cp, 1, faults=object(), table=t) == \
+        ("numpy", None, "faults")
+
+
+def test_program_key_stable_across_recompiles():
+    plan, _, _, _ = _bmv_fixture()
+    k1 = at.program_key(plan.compile())
+    plan._compiled = None                    # simulate cache eviction
+    k2 = at.program_key(plan.compile())
+    fresh = BinaryMatvecPlan(plan.m, plan.n, **GEOM)
+    k3 = at.program_key(fresh.compile())
+    assert k1 == k2 == k3
+    other = BinaryMatvecPlan(plan.m, plan.n * 2, **GEOM)
+    assert at.program_key(other.compile()) != k1
+
+
+def test_observe_keep_fastest():
+    t = at.TuningTable()
+    t.observe("k", 32, "numpy-fused", 100.0)
+    assert t.lookup("k", 32).backend == "numpy-fused"
+    # a slower different variant does not displace the incumbent
+    t.observe("k", 32, "jax-fused", 500.0)
+    assert (t.lookup("k", 32).backend, t.lookup("k", 32).us) == \
+        ("numpy-fused", 100.0)
+    # a faster one does
+    t.observe("k", 32, "jax-fused", 40.0)
+    assert t.lookup("k", 32).backend == "jax-fused"
+    # the incumbent's own time is refreshed even when slower (drift tracking)
+    t.observe("k", 32, "jax-fused", 60.0)
+    assert t.lookup("k", 32).us == 60.0
+    # heuristic-source entries lose to any measurement
+    t.record("h", 1, "numpy-fused", 1.0, source="heuristic")
+    t.observe("h", 1, "numpy-unfused", 999.0)
+    e = t.lookup("h", 1)
+    assert (e.backend, e.source) == ("numpy-unfused", "measured")
+
+
+def test_candidates_span_chunking_and_cheap():
+    plan, _, _, _ = _bmv_fixture()
+    cp = plan.compile()
+    narrow = at.candidates(cp, 8)
+    assert ("numpy-fused", None) in narrow and \
+        ("numpy-unfused", None) in narrow
+    assert not any(mb == at.CHUNK_BATCH for _, mb in narrow)
+    wide = at.candidates(cp, 64)
+    assert ("numpy-unfused", at.CHUNK_BATCH) in wide
+    if have_jax() and jax_fuse_eligible(cp):
+        assert ("jax-fused", None) in at.candidates(cp, 8, cheap=True)
+        assert ("jax-unfused", None) not in at.candidates(cp, 8, cheap=True)
+        assert ("jax-unfused", None) in at.candidates(cp, 8, cheap=False)
+
+
+def test_default_table_follows_env(tmp_path, monkeypatch):
+    p = tmp_path / "env_tunings.json"
+    at.TuningTable(p).record("k", 1, "numpy-fused", 1.0)
+    monkeypatch.setenv(at.TUNINGS_ENV, str(p))
+    at.reset_default_table()
+    try:
+        assert at.get_default_table().path == p
+        monkeypatch.delenv(at.TUNINGS_ENV)
+        assert at.get_default_table().path is None  # re-checked per call
+    finally:
+        at.reset_default_table()
+
+
+# ---------------------------------------------------------------------------
+# execute(backend="auto") + inline measurement
+# ---------------------------------------------------------------------------
+
+
+def test_execute_auto_label_and_measured_chunking():
+    plan, mem, A, x = _bmv_fixture()
+    cp = plan.compile()
+    t = at.TuningTable()
+    key = at.program_key(cp)
+    t.record(key, 1, "numpy-unfused", 5.0)
+    res = execute(cp, mem, backend="auto", tunings=t)
+    assert res.backend == "auto:numpy-unfused"
+    assert np.array_equal(plan.decode_y(res.mem), _bmv_oracle(A, x))
+    # a measured span-chunking entry surfaces in the label as @max_batch
+    B = 40
+    t.record(key, at.batch_bucket(B), "numpy-unfused", 5.0,
+             max_batch=at.CHUNK_BATCH)
+    mems = np.broadcast_to(mem, (B,) + mem.shape).copy()
+    res = execute(cp, mems, backend="auto", tunings=t)
+    assert res.backend == f"auto:numpy-unfused@{at.CHUNK_BATCH}"
+    assert all(np.array_equal(plan.decode_y(res.mem[b]), _bmv_oracle(A, x))
+               for b in range(B))
+
+
+def test_autotune_execute_records_winner():
+    plan, mem, A, x = _bmv_fixture()
+    cp = plan.compile()
+    t = at.TuningTable()
+    mems = np.broadcast_to(mem, (4,) + mem.shape).copy()
+    res, entry = at.autotune_execute(cp, mems, t, reps=1, save=False)
+    assert t.lookup(at.program_key(cp), 4) is entry
+    assert entry.source == "measured" and entry.us > 0
+    assert dict(at.candidates(cp, 4, cheap=True)).get(
+        entry.backend, "missing") == entry.max_batch
+    # the winner's result is returned — the probe was a real execution
+    for b in range(4):
+        assert np.array_equal(plan.decode_y(res.mem[b]), _bmv_oracle(A, x))
+    cp.clear_caches()
+
+
+# ---------------------------------------------------------------------------
+# PlanService integration: cold micro-tune, warm observe, eviction
+# ---------------------------------------------------------------------------
+
+
+def test_service_cold_bucket_micro_tunes(tmp_path):
+    rng = np.random.default_rng(7)
+    table = at.TuningTable(tmp_path / "svc_tunings.json")
+    svc = PlanService(backend="auto", tunings=table, **GEOM)
+    A = rng.choice([-1, 1], size=(4, 12))
+    x = rng.choice([-1, 1], size=12)
+    tk = svc.submit_binary_matvec(A, x)
+    svc.flush()
+    assert np.array_equal(tk.result, _bmv_oracle(A, x))
+    entries = table.entries()
+    assert len(entries) == 1
+    (key, bucket), e = next(iter(entries.items()))
+    assert e.source == "measured"
+    # the cold tune persisted the table to disk for later processes
+    assert (tmp_path / "svc_tunings.json").exists()
+    # a second request of the same shape is warm: entry count is unchanged
+    tk2 = svc.submit_binary_matvec(A, x)
+    svc.flush()
+    assert np.array_equal(tk2.result, _bmv_oracle(A, x))
+    assert set(table.entries()) == {(key, bucket)}
+
+
+def test_service_eviction_does_not_orphan_tunings():
+    """Content-derived keys: evicting + recompiling a plan maps back to the
+    same tunings row instead of stranding the old one and minting a new."""
+    rng = np.random.default_rng(8)
+    table = at.TuningTable()
+    # autotune=False: the warm observe path populates the table without
+    # paying candidate probes, keeping this test fast and deterministic
+    svc = PlanService(max_plans=1, bucket=False, backend="auto",
+                      tunings=table, autotune=False, **GEOM)
+    shapes = [(4, 6), (4, 10)]
+    ops = []
+    for m, k in shapes:
+        A = rng.choice([-1, 1], size=(m, k))
+        x = rng.choice([-1, 1], size=k)
+        ops.append((A, x))
+        svc.submit_binary_matvec(A, x)
+        svc.flush()
+    assert svc.stats.evictions == 1 and len(table) == 2
+    keys_before = set(table.entries())
+    # resubmit the evicted shape: recompile, same program key, no new rows
+    t = svc.submit_binary_matvec(*ops[0])
+    svc.flush()
+    assert svc.stats.evictions == 2       # second shape evicted in turn
+    assert np.array_equal(t.result, _bmv_oracle(*ops[0]))
+    assert set(table.entries()) == keys_before
+
+
+def test_service_faults_bypass_table():
+    from repro.device.faults import FaultModel
+    rng = np.random.default_rng(9)
+    table = at.TuningTable()
+    svc = PlanService(backend="auto", tunings=table, **GEOM)
+    A = rng.choice([-1, 1], size=(4, 8))
+    x = rng.choice([-1, 1], size=8)
+    t = svc.submit_binary_matvec(A, x, faults=FaultModel.uniform(0.0))
+    svc.flush()
+    assert np.array_equal(t.result, _bmv_oracle(A, x))
+    assert len(table) == 0                # fault runs never train the table

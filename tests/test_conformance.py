@@ -241,13 +241,28 @@ def test_fusion_cycle_accounting_invariant():
 
 
 def test_backend_name_parsing_and_contracts():
+    from repro.core import available_backends
+
     assert parse_backend("numpy") == ("numpy", "auto")
     assert parse_backend("numpy-unfused") == ("numpy", "unfused")
     assert parse_backend("jax-fused") == ("jax", "fused")
+    assert parse_backend("auto") == ("auto", "auto")
+    assert parse_backend("pallas") == ("pallas", "auto")
     with pytest.raises(ValueError):
         parse_backend("interp")        # plan-level only
     with pytest.raises(ValueError):
         parse_backend("torch")
+    for bad in ("auto-fused", "pallas-unfused"):
+        with pytest.raises(ValueError):
+            parse_backend(bad)         # meta-backends take no variant suffix
+    with pytest.raises(ValueError) as ei:
+        parse_backend("torch")
+    # the error enumerates the real set (the old message named only 2 of 8)
+    for be in ("auto", "numpy-unfused", "jax-fused", "pallas"):
+        assert f"'{be}'" in str(ei.value)
+    bs = available_backends()
+    assert {"auto", "numpy", "numpy-fused", "numpy-unfused"} <= set(bs)
+    assert ("jax" in bs) == have_jax() and ("pallas" in bs) == have_jax()
 
     prog = [[ColOp("NOT", (0,), 1, None)]]
     cp = compile_program(prog, 8, 8, 1, 1)

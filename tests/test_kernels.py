@@ -206,3 +206,59 @@ def test_ops_default_dispatches_to_ref_off_tpu(monkeypatch):
 
     with pytest.raises(AssertionError, match="Pallas path"):
         ops.matvec(a, v, use_pallas=True)
+
+
+# -- packed-word dtype acceptance -------------------------------------------
+
+
+def test_as_packed_words_accepts_wide_unsigned():
+    """uint64/uint16/uint8 packed words must reach the kernels losslessly.
+
+    Regression: ``jnp.asarray`` on a uint64 array with x64 disabled silently
+    truncates to 32 bits — the top word of every 64-bit pack vanished.
+    ``as_packed_words`` reinterprets the bytes instead (little-endian), so
+    bit k of the wide word stays bit k of the uint32 word stream.
+    """
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    w32 = rng.integers(0, 1 << 32, size=(8, 4), dtype=np.uint64).astype(
+        np.uint32)
+    base = np.asarray(ops.as_packed_words(w32))
+    assert base.dtype == np.uint32 and np.array_equal(base, w32)
+
+    # uint64 view: pairs of uint32 words, little-endian — same bit stream
+    w64 = w32.view(np.uint64)
+    got64 = np.asarray(ops.as_packed_words(w64))
+    assert got64.dtype == np.uint32 and np.array_equal(got64, w32)
+    # the MSB half of each uint64 word must survive (the truncation bug)
+    assert np.array_equal(got64[:, 1::2], w32[:, 1::2])
+
+    # narrow widths widen the same way
+    w16 = w32.view(np.uint16)
+    assert np.array_equal(np.asarray(ops.as_packed_words(w16)), w32)
+    w8 = w32.view(np.uint8)
+    assert np.array_equal(np.asarray(ops.as_packed_words(w8)), w32)
+
+    with pytest.raises(TypeError, match="unsigned"):
+        ops.as_packed_words(w32.astype(np.int64))
+    with pytest.raises(ValueError, match="whole"):
+        ops.as_packed_words(w32.view(np.uint8)[:, :6])  # 6 bytes: 1.5 words
+
+
+def test_binary_dense_uint64_weights_match_uint32():
+    """End-to-end: binary_dense with uint64-packed weights equals uint32."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(1)
+    K, N = 64, 8
+    x = jnp.asarray(rng.choice([-1, 1], (4, K)), jnp.float32)
+    wp32 = ref.pack_bits(jnp.asarray(rng.choice([-1, 1], (N, K)),
+                                     jnp.float32))
+    wp64 = np.asarray(wp32).view(np.uint64)
+    want = np.asarray(ops.binary_dense(x, wp32, K))
+    got = np.asarray(ops.binary_dense(x, wp64, K))
+    assert np.array_equal(got, want)
+    # and through the real (interpret-mode) Pallas kernel as well
+    got_pl = np.asarray(ops.binary_dense(x, wp64, K, use_pallas=True))
+    assert np.array_equal(got_pl, want)

@@ -1,0 +1,239 @@
+"""Pallas executor backend conformance: eligible traces, bit-identical.
+
+``backend="pallas"`` lowers a compiled trace's *algorithm* onto the
+``repro.kernels`` Pallas kernels instead of replaying its gate cycles. The
+contract under test:
+
+* the plan's decode functions read bit-identical values off a pallas run
+  and a numpy replay, for every eligible trace kind (binary matvec,
+  encoded matvec incl. alpha>1 duplication, conv with in-array kstore,
+  K-specialized conv);
+* cycle counts and op stats still come from the trace (the backend changes
+  simulation speed, never the simulated machine's cost);
+* ineligible programs (no ``pallas_spec``, fault injection, f32-exactness
+  bound exceeded) fall back to a concrete backend with a
+  ``"pallas:fallback-<base>"`` label and full correctness.
+
+The randomized sweep scales with ``CONFORMANCE_EXAMPLES`` (nightly CI
+raises it); the fixed-shape tests are tier-1 fast smoke coverage. Kernels
+run in interpret mode off-TPU, so everything here is CPU-runnable.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import BinaryMatvecPlan, MatvecPlan, have_jax
+from repro.core import pallas_exec as px
+from repro.core.binary_matvec import NaiveBinaryMatvecPlan
+from repro.core.conv import ConvPlan
+from repro.core.engine import execute
+from repro.device.faults import FaultModel, FaultRealization
+
+pytestmark = pytest.mark.skipif(not have_jax(),
+                                reason="pallas backend requires jax")
+
+EXAMPLES = int(os.environ.get("CONFORMANCE_EXAMPLES", "4"))
+GEOM = dict(rows=64, cols=256, parts=8)
+
+
+def _loaded(plan, load):
+    mem = np.zeros((plan.rows, plan.cols), dtype=np.uint8)
+    load(mem)
+    return mem
+
+
+def _both(plan, mem):
+    """(pallas result, numpy result) for one loaded image."""
+    cp = plan.compile()
+    return execute(cp, mem, backend="pallas"), execute(cp, mem,
+                                                       backend="numpy")
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape smoke: one per trace kind (tier-1 fast)
+# ---------------------------------------------------------------------------
+
+
+def test_binary_matvec_bit_identical():
+    rng = np.random.default_rng(0)
+    plan = BinaryMatvecPlan(4, 16, **GEOM)
+    A = rng.choice([-1, 1], size=(4, 16))
+    x = rng.choice([-1, 1], size=16)
+    mem = _loaded(plan, lambda m: plan.load_into(m, A, x))
+    rp, rn = _both(plan, mem)
+    assert rp.backend == "pallas"
+    # accounting comes from the trace, not the kernels
+    assert rp.cycles == rn.cycles and rp.stats == rn.stats
+    # decode contract: y AND the raw popcount field agree bit-for-bit
+    assert np.array_equal(plan.decode_y(rp.mem), plan.decode_y(rn.mem))
+    assert np.array_equal(plan.decode_popcount(rp.mem),
+                          plan.decode_popcount(rn.mem))
+    assert np.array_equal(plan.decode_y(rp.mem),
+                          np.where(A @ x >= 0, 1, -1))
+
+
+def test_matvec_bit_identical_with_duplication():
+    rng = np.random.default_rng(1)
+    plan = MatvecPlan(8, 4, 4, alpha=2, **GEOM)   # m % (rows//parts) == 0
+    A = rng.integers(0, 16, size=(8, 4))
+    x = rng.integers(0, 16, size=4)
+    mem = _loaded(plan, lambda m: plan.load_into(m, A, x))
+    rp, rn = _both(plan, mem)
+    assert rp.backend == "pallas" and rp.cycles == rn.cycles
+    assert np.array_equal(plan.decode_y(rp.mem), plan.decode_y(rn.mem))
+    assert np.array_equal(plan.decode_y(rp.mem), (A @ x) % (1 << 8))
+
+
+@pytest.mark.parametrize("specialize", [False, True])
+def test_conv_bit_identical(specialize):
+    rng = np.random.default_rng(2)
+    plan = ConvPlan(6, 6, 2, 4, specialize_kernel=specialize, **GEOM)
+    A = rng.integers(0, 16, size=(6, 6))
+    K = rng.integers(0, 16, size=(2, 2))
+    plan.ensure_program(K)
+    mem = _loaded(plan, lambda m: plan.load_into(m, A, K))
+    rp, rn = _both(plan, mem)
+    assert rp.backend == "pallas" and rp.cycles == rn.cycles
+    assert np.array_equal(plan.decode_out(rp.mem), plan.decode_out(rn.mem))
+    want = np.zeros((5, 5), dtype=np.int64)
+    for i in range(5):
+        for j in range(5):
+            want[i, j] = int((A[i:i + 2, j:j + 2] * K).sum()) % 16
+    assert np.array_equal(plan.decode_out(rp.mem), want)
+
+
+def test_conv_batch_distinct_kstore_kernels():
+    """Kernel-independent conv programs batch distinct kernels: the kstore
+    bits are read per instance, not captured from the plan."""
+    rng = np.random.default_rng(3)
+    plan = ConvPlan(6, 6, 2, 4, **GEOM)
+    K0 = rng.integers(0, 16, size=(2, 2))
+    plan.ensure_program(K0)
+    cp = plan.compile()
+    mems, As, Ks = [], [], []
+    for _ in range(3):
+        A = rng.integers(0, 16, size=(6, 6))
+        K = rng.integers(0, 16, size=(2, 2))
+        As.append(A), Ks.append(K)
+        mems.append(_loaded(plan, lambda m, A=A, K=K:
+                            plan.load_into(m, A, K)))
+    mems = np.stack(mems)
+    rp = execute(cp, mems, backend="pallas")
+    rn = execute(cp, mems, backend="numpy")
+    assert rp.backend == "pallas"
+    for b in range(3):
+        assert np.array_equal(plan.decode_out(rp.mem[b]),
+                              plan.decode_out(rn.mem[b])), b
+
+
+# ---------------------------------------------------------------------------
+# Eligibility + fallback
+# ---------------------------------------------------------------------------
+
+
+def test_spec_attached_and_eligible():
+    plan = BinaryMatvecPlan(4, 16, **GEOM)
+    cp = plan.compile()
+    assert cp.pallas_spec is not None and cp.pallas_spec["kind"] == \
+        "binary_matvec"
+    assert px.pallas_eligible(cp)
+    # unfused compiles carry the spec too
+    assert plan.compile(fuse=False).pallas_spec is not None
+
+
+def test_spec_less_trace_falls_back():
+    rng = np.random.default_rng(4)
+    plan = NaiveBinaryMatvecPlan(4, 8, **GEOM)    # no pallas_spec override
+    cp = plan.compile()
+    assert not px.pallas_eligible(cp)
+    A = rng.choice([-1, 1], size=(4, 8))
+    x = rng.choice([-1, 1], size=8)
+    mem = np.zeros((plan.rows, plan.cols), dtype=np.uint8)
+    mem[:4, plan.a_cols] = (A > 0).astype(np.uint8)
+    mem[0, plan.x_cols] = (x > 0).astype(np.uint8)
+    res = execute(cp, mem, backend="pallas")
+    assert res.backend == "pallas:fallback-jax"   # have_jax() gate above
+    want = execute(cp, mem, backend="numpy")
+    assert np.array_equal(res.mem, want.mem)      # full replay: exact image
+
+
+def test_faults_fall_back():
+    rng = np.random.default_rng(5)
+    plan = BinaryMatvecPlan(4, 16, **GEOM)
+    A = rng.choice([-1, 1], size=(4, 16))
+    x = rng.choice([-1, 1], size=16)
+    mem = _loaded(plan, lambda m: plan.load_into(m, A, x))
+    cp = plan.compile()
+    real = FaultRealization.sample(
+        FaultModel.uniform(3e-3), 1, plan.rows, plan.cols,
+        cp.n_cycles, cp.W, cp.I, rng=np.random.default_rng(5))
+    assert not px.pallas_eligible(cp, faults=real)
+    res = execute(cp, mem, backend="pallas", faults=real)
+    assert res.backend == "pallas:fallback-jax"
+    want = execute(cp, mem, backend="numpy-fused", faults=real)
+    assert np.array_equal(res.mem, want.mem)      # pinned masks: bit-exact
+
+
+def test_exactness_bound_rejects_and_falls_back():
+    plan = MatvecPlan(8, 8, 4, **GEOM)
+    cp = plan.compile()
+    assert px.pallas_eligible(cp)                 # 8·15² « 2^24
+    # push the spec over the f32-exactness bound: the gate must reject it
+    # and execute must route to a concrete backend, still correct
+    cp.pallas_spec = dict(cp.pallas_spec, N=12)   # 8·4095² > 2^24
+    assert not px.pallas_eligible(cp)
+    rng = np.random.default_rng(6)
+    A = rng.integers(0, 16, size=(8, 8))
+    x = rng.integers(0, 16, size=8)
+    mem = _loaded(plan, lambda m: plan.load_into(m, A, x))
+    res = execute(cp, mem, backend="pallas")
+    assert res.backend.startswith("pallas:fallback-")
+    assert np.array_equal(plan.decode_y(res.mem), (A @ x) % (1 << 8))
+    plan._compiled = None                         # drop the doctored trace
+
+
+# ---------------------------------------------------------------------------
+# Randomized sweep (CONFORMANCE_EXAMPLES-scaled; nightly raises it)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(EXAMPLES))
+def test_randomized_conformance(seed):
+    rng = np.random.default_rng(100 + seed)
+    kind = ("binary_matvec", "matvec", "conv")[seed % 3]
+    if kind == "binary_matvec":
+        m = int(rng.integers(2, 9))
+        n = 8 * int(rng.integers(1, 5))           # n % parts == 0
+        plan = BinaryMatvecPlan(m, n, **GEOM)
+        A = rng.choice([-1, 1], size=(m, n))
+        x = rng.choice([-1, 1], size=n)
+        mem = _loaded(plan, lambda mm: plan.load_into(mm, A, x))
+        rp, rn = _both(plan, mem)
+        got, want = plan.decode_y(rp.mem), plan.decode_y(rn.mem)
+        also = plan.decode_popcount(rp.mem), plan.decode_popcount(rn.mem)
+        assert np.array_equal(*also)
+    elif kind == "matvec":
+        m = int(rng.integers(2, 9))
+        N = int(rng.integers(2, 5))
+        n = int(rng.integers(1, 7))
+        plan = MatvecPlan(m, n, N, alpha=1, **GEOM)
+        A = rng.integers(0, 1 << N, size=(m, n))
+        x = rng.integers(0, 1 << N, size=n)
+        mem = _loaded(plan, lambda mm: plan.load_into(mm, A, x))
+        rp, rn = _both(plan, mem)
+        got, want = plan.decode_y(rp.mem), plan.decode_y(rn.mem)
+        assert np.array_equal(got, (A @ x) % (1 << (2 * N)))
+    else:
+        N = int(rng.integers(2, 5))
+        k = int(rng.integers(2, 4))
+        mn = int(rng.integers(k + 1, 9))
+        plan = ConvPlan(mn, mn, k, N, **GEOM)
+        A = rng.integers(0, 1 << N, size=(mn, mn))
+        K = rng.integers(0, 1 << N, size=(k, k))
+        plan.ensure_program(K)
+        mem = _loaded(plan, lambda mm: plan.load_into(mm, A, K))
+        rp, rn = _both(plan, mem)
+        got, want = plan.decode_out(rp.mem), plan.decode_out(rn.mem)
+    assert rp.backend == "pallas" and rp.cycles == rn.cycles
+    assert np.array_equal(got, want), (kind, seed)

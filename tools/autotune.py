@@ -1,0 +1,120 @@
+"""Populate the backend-autotuner tunings table by timing real replays.
+
+For each workload in a small representative sweep (the algorithm plans the
+serving layer buckets to, at the shape buckets it uses) and each batch
+bucket, time every candidate backend variant on a real ``engine.execute``
+replay and record the fastest into the on-disk tunings table
+(``core.autotune.TuningTable``). ``backend="auto"`` then serves the
+measured winner for matching ``(program key, batch bucket)`` pairs; pairs
+never tuned fall back to the conservative heuristic.
+
+    PYTHONPATH=src python tools/autotune.py --out results/tunings.json
+    PYTHONPATH=src python tools/autotune.py --quick       # small sweep
+    MATPIM_TUNINGS=results/tunings.json python ...        # consumers
+
+The table is content-keyed: re-running after a code change that alters
+trace shape simply writes new keys (stale keys are ignored by lookups), and
+corrupt tables are treated as empty by every consumer.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import BinaryMatvecPlan, MatvecPlan  # noqa: E402
+from repro.core.autotune import (CHUNK_BATCH, TuningTable,  # noqa: E402
+                                 autotune_execute, batch_bucket)
+from repro.core.conv import ConvPlan  # noqa: E402
+
+
+def _workloads(quick: bool):
+    """(name, plan, loader) triples covering the serving bucket shapes."""
+    rng = np.random.default_rng(0)
+    if quick:
+        geoms = dict(rows=256, cols=256, parts=8)
+        shapes = [("binary_matvec", BinaryMatvecPlan(64, 64, **geoms)),
+                  ("matvec", MatvecPlan(64, 8, 4, alpha=1, **geoms))]
+    else:
+        geoms = dict(rows=1024, cols=1024, parts=32)
+        shapes = [
+            ("binary_matvec", BinaryMatvecPlan(256, 128, **geoms)),
+            ("binary_matvec", BinaryMatvecPlan(1024, 384, **geoms)),
+            ("matvec", MatvecPlan(128, 16, 4, alpha=1, **geoms)),
+            ("conv", ConvPlan(32, 32, 3, 4, **geoms)),
+        ]
+    out = []
+    for name, plan in shapes:
+        if isinstance(plan, BinaryMatvecPlan):
+            A = rng.choice([-1, 1], size=(plan.m, plan.n))
+            x = rng.choice([-1, 1], size=plan.n)
+
+            def load(mem, plan=plan, A=A, x=x):
+                plan.load_into(mem, A, x)
+        elif isinstance(plan, MatvecPlan):
+            A = rng.integers(0, 1 << plan.N, size=(plan.m, plan.n))
+            x = rng.integers(0, 1 << plan.N, size=plan.n)
+
+            def load(mem, plan=plan, A=A, x=x):
+                plan.load_into(mem, A, x)
+        else:
+            A = rng.integers(0, 1 << plan.N, size=(plan.m, plan.n))
+            K = rng.integers(0, 1 << plan.N, size=(plan.k, plan.k))
+            plan.ensure_program(K)
+
+            def load(mem, plan=plan, A=A, K=K):
+                plan.load_into(mem, A, K)
+        out.append((f"{name}_{plan.m}x{plan.n}", plan, load))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="results/tunings.json",
+                    help="tunings table path (default results/tunings.json)")
+    ap.add_argument("--batches", type=int, nargs="*",
+                    default=[1, 8, 32, 64, 128],
+                    help="batch widths to tune (bucketed per power of two)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timing repetitions per candidate (min is kept)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small geometry + fewer shapes/batches (CI smoke)")
+    ap.add_argument("--full-candidates", action="store_true",
+                    help="include jax-unfused (slow to jit, rarely wins)")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.batches = [b for b in args.batches if b <= CHUNK_BATCH * 2]
+
+    table = TuningTable(args.out)
+    t_start = time.perf_counter()
+    for name, plan, load in _workloads(args.quick):
+        mem = np.zeros((plan.rows, plan.cols), dtype=np.uint8)
+        load(mem)
+        cp = plan.compile()
+        for B in args.batches:
+            mems = np.broadcast_to(mem, (B,) + mem.shape).copy()
+            _, entry = autotune_execute(
+                cp, mems, table, reps=args.reps,
+                cheap=not args.full_candidates, save=False)
+            mb = f"@{entry.max_batch}" if entry.max_batch else ""
+            print(f"{name:28s} B={B:4d} (bucket {batch_bucket(B):4d}) -> "
+                  f"{entry.backend}{mb}  {entry.us/1e3:9.2f} ms")
+        # executor artifacts for this trace are no longer needed
+        cp.clear_caches()
+    table.save()
+    keys = {k for k, _ in table.entries()}
+    print(f"\nwrote {len(table)} entries ({len(keys)} program keys) to "
+          f"{args.out} in {time.perf_counter()-t_start:.1f}s")
+    print("consume with: MATPIM_TUNINGS="
+          f"{args.out} (engine backend='auto'), or "
+          f"PlanService(backend='auto', tunings=TuningTable({args.out!r}))")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
