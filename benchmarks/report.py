@@ -274,6 +274,116 @@ def auto_vs_fixed_table() -> list:
     return warnings
 
 
+SLO_ROW_KEYS = ("mode", "load_factor", "offered_rps", "achieved_rps",
+                "requests", "p50_ms", "p95_ms", "p99_ms",
+                "mean_queue_units", "max_queue_units", "hit_rate", "batches")
+
+
+def validate_slo(payload: dict) -> list:
+    """Schema check for ``BENCH_slo.json``; returns a list of problems.
+
+    The contract: ≥3 offered-load rows, every row carries the full
+    latency/throughput/queue/hit-rate column set, percentiles are ordered,
+    and exactly one row is the closed-loop capacity measurement.
+    """
+    errs = []
+    if payload.get("schema") != 1:
+        errs.append(f"schema {payload.get('schema')!r} != 1")
+    if payload.get("bench") != "slo":
+        errs.append(f"bench {payload.get('bench')!r} != 'slo'")
+    rows = payload.get("rows")
+    if not isinstance(rows, list) or len(rows) < 3:
+        errs.append(f"need >=3 offered-load rows, got "
+                    f"{len(rows) if isinstance(rows, list) else rows!r}")
+        return errs
+    closed = 0
+    for i, r in enumerate(rows):
+        missing = [k for k in SLO_ROW_KEYS if k not in r]
+        if missing:
+            errs.append(f"row {i} missing keys: {missing}")
+            continue
+        if r["mode"] not in ("closed", "open"):
+            errs.append(f"row {i} mode {r['mode']!r}")
+        closed += r["mode"] == "closed"
+        if not r["p50_ms"] <= r["p95_ms"] <= r["p99_ms"]:
+            errs.append(f"row {i} percentiles out of order: "
+                        f"{r['p50_ms']}/{r['p95_ms']}/{r['p99_ms']}")
+        if r["mode"] == "open" and not r["offered_rps"] > 0:
+            errs.append(f"row {i} open-loop offered_rps {r['offered_rps']!r}")
+    if closed != 1:
+        errs.append(f"expected exactly one closed-loop row, got {closed}")
+    return errs
+
+
+def _slo_row_key(r: dict) -> tuple:
+    return (r["mode"], r["load_factor"])
+
+
+def slo_table() -> list:
+    """Summarize + schema-validate ``BENCH_slo.json`` and delta-flag p95
+    regressions above ``REGRESSION_PCT`` percent vs the previous committed
+    run (rows matched by ``(mode, load_factor)``). A missing or
+    schema-invalid record is a hard error, mirroring :func:`bench_table`.
+    Returns the WARNING strings (also printed)."""
+    p = ROOT / "BENCH_slo.json"
+    if not p.exists():
+        sys.exit("benchmarks/report.py: missing BENCH_slo.json — regenerate "
+                 "with `PYTHONPATH=src python -m benchmarks.slo [--quick]`")
+    cur = json.load(open(p))
+    errs = validate_slo(cur)
+    if errs:
+        sys.exit("benchmarks/report.py: BENCH_slo.json schema invalid: "
+                 + "; ".join(errs))
+    print("\n### SLO under offered load (BENCH_slo.json)\n")
+    print(f"backend={cur.get('backend')} slots={cur.get('slots')} "
+          f"requests/row={cur.get('requests_per_row')} "
+          f"quick={cur.get('quick')}\n")
+    print("| mode | load | offered rps | achieved rps | p50 ms | p95 ms | "
+          "p99 ms | queue mean/max | hit rate |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in cur["rows"]:
+        lf = "—" if r["load_factor"] is None else f"×{r['load_factor']:g}"
+        off = "—" if r["offered_rps"] is None else f"{r['offered_rps']:.1f}"
+        print(f"| {r['mode']} | {lf} | {off} | {r['achieved_rps']:.1f} | "
+              f"{r['p50_ms']:.2f} | {r['p95_ms']:.2f} | {r['p99_ms']:.2f} | "
+              f"{r['mean_queue_units']:.1f}/{r['max_queue_units']} | "
+              f"{r['hit_rate']:.3f} |")
+
+    warnings = []
+    try:
+        prev = json.loads(subprocess.run(
+            ["git", "show", "HEAD:BENCH_slo.json"], cwd=ROOT,
+            capture_output=True, text=True, check=True).stdout)
+    except (subprocess.CalledProcessError, FileNotFoundError,
+            json.JSONDecodeError):
+        print("\n(no previous BENCH_slo.json at git HEAD — baseline run)")
+        return warnings
+    if cur.get("quick") != prev.get("quick"):
+        print(f"\n(BENCH_slo.json quick={cur.get('quick')} vs previous "
+              f"quick={prev.get('quick')} — p95 deltas not comparable, "
+              f"skipping)")
+        return warnings
+    prev_rows = {_slo_row_key(r): r for r in prev.get("rows", [])
+                 if all(k in r for k in SLO_ROW_KEYS)}
+    for r in cur["rows"]:
+        pr = prev_rows.get(_slo_row_key(r))
+        if pr is None or not pr["p95_ms"]:
+            continue
+        delta = (r["p95_ms"] - pr["p95_ms"]) / pr["p95_ms"] * 100
+        if delta > REGRESSION_PCT:
+            lf = r["load_factor"]
+            warnings.append(
+                f"WARNING: slo {r['mode']}"
+                + (f" x{lf:g}" if lf is not None else "")
+                + f" p95 regressed {delta:+.1f}% "
+                f"({pr['p95_ms']:.2f} -> {r['p95_ms']:.2f} ms)")
+    for w in warnings:
+        print(w)
+    if not warnings:
+        print(f"\nno SLO p95 regressions above {REGRESSION_PCT:.0f}%")
+    return warnings
+
+
 def main():
     cells = load()
     n_ok = sum(1 for d in cells.values() if d.get("ok"))
@@ -283,6 +393,7 @@ def main():
     bench_table()
     bench_delta_table()
     auto_vs_fixed_table()
+    slo_table()
     print("\n## §Dry-run\n")
     dryrun_table(cells)
     print("\n## §Roofline (single-pod 16x16, per-device terms)\n")

@@ -440,6 +440,26 @@ def bench_serve(quick=False):
          f"req_per_s={len(tickets)/(us/1e6):.1f}")
 
 
+def bench_slo(quick=False):
+    """SLO sweep over the serving layer (see ``benchmarks/slo.py``).
+
+    Writes ``BENCH_slo.json`` with its own richer row schema (validated by
+    ``benchmarks/report.py``) and mirrors each row here as a CSV line whose
+    value is the row's p95 latency in µs.
+    """
+    from benchmarks.slo import run_sweep, write_json
+
+    payload = run_sweep(quick=quick)
+    write_json(payload, ROOT / "BENCH_slo.json")
+    for r in payload["rows"]:
+        label = ("closed" if r["load_factor"] is None
+                 else f"open_x{r['load_factor']:g}")
+        _rec(f"slo/{label}", r["p95_ms"] * 1e3,
+             f"p50_ms={r['p50_ms']:.2f};p99_ms={r['p99_ms']:.2f};"
+             f"rps={r['achieved_rps']:.1f};hit_rate={r['hit_rate']:.3f};"
+             f"queue_mean={r['mean_queue_units']:.1f}")
+
+
 def bench_kernels(quick=False):
     """Pallas kernels (interpret mode on CPU) vs jnp oracles: wall time."""
     import jax.numpy as jnp
@@ -550,6 +570,7 @@ def main():
         "device": bench_device,
         "apps": bench_apps,
         "serve": bench_serve,
+        "slo": bench_slo,
         "kernels": bench_kernels,
         "train": bench_train_throughput,
         "roofline": bench_roofline,

@@ -1,0 +1,254 @@
+"""SLO load harness: closed- and open-loop load over ``PlanService``.
+
+Measures the serving layer the way an SLA is written: per-request latency
+percentiles (p50/p95/p99) and throughput as a function of *offered* load,
+not just best-case batched wall time.
+
+* **closed loop** — drive :meth:`PlanService.run_stream` with the next
+  request admitted the moment a slot frees. This measures capacity: the
+  achieved request rate is the service's saturation throughput, and the
+  latencies are the best case (no queueing ahead of arrival).
+* **open loop** — requests arrive on a fixed schedule (a Poisson-free
+  deterministic spacing at ``offered_rps``) regardless of service progress;
+  latency is ``finish - arrival``, so queueing delay under overload shows
+  up honestly (closed-loop harnesses famously hide it). Offered rates are
+  swept as multiples of the measured closed-loop capacity
+  (``LOAD_FACTORS``), so the sweep is machine-independent.
+
+Output is ``BENCH_slo.json`` at the repo root — one row per (mode, load
+factor) with p50/p95/p99 latency, achieved throughput, queue depth, plan-
+cache hit rate and batch count; ``benchmarks/report.py`` validates the
+schema and delta-flags p95 regressions. ``--trace FILE`` additionally
+records a Chrome-trace/Perfetto span timeline of the whole sweep.
+
+    PYTHONPATH=src python -m benchmarks.slo [--quick] [--trace FILE]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parent.parent
+
+SCHEMA = 1
+# offered load as a multiple of measured closed-loop capacity; >1 rows
+# deliberately probe the overload regime where queueing dominates latency
+LOAD_FACTORS = (0.25, 0.5, 1.0, 1.5)
+LOAD_FACTORS_QUICK = (0.25, 0.75, 1.5)
+
+
+def make_stream(n: int, rng: np.random.Generator, quick: bool = False):
+    """Mixed heterogeneous request stream (shuffled kinds and shapes).
+
+    Shapes spread over a handful of pow2 buckets so the plan cache sees a
+    realistic hit rate (<1); conv requests join only the full run (their
+    first-compile cost dwarfs a quick sweep).
+    """
+    from repro.serve.matpim import ServeRequest
+
+    reqs = []
+    for _ in range(n):
+        kind = rng.choice(["binary_matvec", "binary_matvec", "matvec"]
+                          + ([] if quick else ["conv"]))
+        if kind == "binary_matvec":
+            m = int(rng.integers(8, 96))
+            k = int(rng.integers(16, 96))
+            reqs.append(ServeRequest("binary_matvec", (
+                rng.choice([-1, 1], size=(m, k)),
+                rng.choice([-1, 1], size=k))))
+        elif kind == "matvec":
+            m = int(rng.integers(8, 48))
+            k = int(rng.integers(16, 64))
+            reqs.append(ServeRequest("matvec", (
+                rng.integers(0, 16, size=(m, k)),
+                rng.integers(0, 16, size=k), 4)))
+        else:
+            img = rng.integers(0, 64, size=(int(rng.integers(8, 17)),
+                                            int(rng.integers(8, 17))))
+            reqs.append(ServeRequest("conv", (img, np.array(
+                [[1, 2, 1], [2, 4, 2], [1, 2, 1]]), 8)))
+    return reqs
+
+
+def _percentiles_ms(lat_s: List[float]) -> Dict[str, float]:
+    a = np.asarray(lat_s, dtype=float) * 1e3
+    return {"p50_ms": float(np.percentile(a, 50)),
+            "p95_ms": float(np.percentile(a, 95)),
+            "p99_ms": float(np.percentile(a, 99))}
+
+
+def closed_loop(svc, requests, slots: int) -> dict:
+    """Capacity row: ``run_stream`` with back-to-back admission."""
+    queue_samples: List[int] = []
+
+    def sampling_iter():
+        for r in requests:
+            queue_samples.append(svc.pending_units)
+            yield r
+
+    base = svc.stats.batches
+    t0 = time.perf_counter()
+    tickets = svc.run_stream(sampling_iter(), slots=slots)
+    wall = time.perf_counter() - t0
+    lat = [t.wall_s for t in tickets]
+    row = {"mode": "closed", "load_factor": None, "offered_rps": None,
+           "requests": len(tickets),
+           "achieved_rps": len(tickets) / wall if wall else 0.0,
+           "mean_queue_units": float(np.mean(queue_samples)),
+           "max_queue_units": int(np.max(queue_samples)),
+           "hit_rate": svc.stats.hit_rate,
+           "batches": svc.stats.batches - base}
+    row.update(_percentiles_ms(lat))
+    return row
+
+
+def open_loop(svc, requests, offered_rps: float, load_factor: float,
+              slots: int) -> dict:
+    """Offered-load row: deterministic arrivals at ``offered_rps``.
+
+    Latency is measured against the *scheduled* arrival time, so a request
+    the service was too busy to even admit accrues its queueing delay —
+    the open-loop property that makes overload rows honest.
+    """
+    arrivals = [i / offered_rps for i in range(len(requests))]
+    queue_samples: List[int] = []
+    arr: Dict[int, float] = {}
+    fin: Dict[int, float] = {}
+    tickets = []
+    base = svc.stats.batches
+    i = 0
+    t0 = time.perf_counter()
+    while i < len(requests) or svc.pending_units:
+        now = time.perf_counter() - t0
+        while i < len(requests) and arrivals[i] <= now:
+            r = requests[i]
+            t = svc.submit(r.kind, *r.args, **r.kwargs)
+            arr[t.uid] = arrivals[i]
+            tickets.append(t)
+            i += 1
+        if not svc.pending_units:
+            if i < len(requests):        # idle until the next arrival
+                wait = arrivals[i] - (time.perf_counter() - t0)
+                if wait > 0:
+                    time.sleep(min(wait, 0.005))
+            continue
+        queue_samples.append(svc.pending_units)
+        done = svc.step(max_units=slots)
+        now = time.perf_counter() - t0
+        for t in done:
+            fin[t.uid] = now
+    wall = time.perf_counter() - t0
+    lat = [fin[t.uid] - arr[t.uid] for t in tickets]
+    row = {"mode": "open", "load_factor": float(load_factor),
+           "offered_rps": float(offered_rps), "requests": len(tickets),
+           "achieved_rps": len(tickets) / wall if wall else 0.0,
+           "mean_queue_units": float(np.mean(queue_samples)),
+           "max_queue_units": int(np.max(queue_samples)),
+           "hit_rate": svc.stats.hit_rate,
+           "batches": svc.stats.batches - base}
+    row.update(_percentiles_ms(lat))
+    return row
+
+
+def run_sweep(quick: bool = False, backend: str = "numpy", slots: int = 32,
+              seed: int = 0, n_requests: Optional[int] = None,
+              log=print) -> dict:
+    """The full sweep: warm-up, closed-loop capacity, open-loop factors.
+
+    One warm service serves every row (plan cache + jit warm, per-row stats
+    reset), so rows measure steady-state serving, not first-compile cost —
+    that cost is reported separately as ``warmup_s``/``compile_s``.
+    """
+    from repro.serve.matpim import CacheStats, PlanService
+
+    rng = np.random.default_rng(seed)
+    n = n_requests or (24 if quick else 64)
+    svc = PlanService(rows=64, cols=256, parts=8, backend=backend,
+                      max_plans=64)
+
+    # one request set for every row (shuffled per row): the warm-up pass
+    # compiles exactly the plans the rows exercise, so no row pays a cold
+    # compile and the rows differ only in arrival process
+    reqs = make_stream(n, rng, quick=quick)
+
+    def row_stream():
+        order = rng.permutation(len(reqs))
+        return [reqs[i] for i in order]
+
+    t0 = time.perf_counter()
+    svc.run_stream(iter(reqs), slots=slots)    # compile + jit every bucket
+    warm_wall = time.perf_counter() - t0
+    cold = {"warm_wall_s": warm_wall, "compile_s": svc.stats.compile_s,
+            "warmup_s": svc.stats.warmup_s}
+    log(f"warm-up: {n} reqs in {warm_wall:.2f}s "
+        f"(compile {svc.stats.compile_s:.2f}s, "
+        f"jit warm-up {svc.stats.warmup_s:.2f}s)", file=sys.stderr)
+
+    rows = []
+    svc.stats = CacheStats()
+    closed = closed_loop(svc, row_stream(), slots)
+    rows.append(closed)
+    cap = closed["achieved_rps"]
+    log(f"closed loop: {cap:.1f} req/s, p95 {closed['p95_ms']:.2f} ms",
+        file=sys.stderr)
+
+    for f in (LOAD_FACTORS_QUICK if quick else LOAD_FACTORS):
+        svc.stats = CacheStats()
+        row = open_loop(svc, row_stream(),
+                        offered_rps=max(cap * f, 1e-6), load_factor=f,
+                        slots=slots)
+        rows.append(row)
+        log(f"open loop x{f}: offered {row['offered_rps']:.1f} "
+            f"achieved {row['achieved_rps']:.1f} req/s, "
+            f"p95 {row['p95_ms']:.2f} ms, "
+            f"queue mean {row['mean_queue_units']:.1f}", file=sys.stderr)
+
+    return {"schema": SCHEMA, "bench": "slo", "quick": bool(quick),
+            "generated_by": "benchmarks/slo.py", "backend": backend,
+            "slots": int(slots), "requests_per_row": n, "cold_start": cold,
+            "capacity_rps": cap, "rows": rows}
+
+
+def write_json(payload: dict, path: Path) -> None:
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path}", file=sys.stderr)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", default="numpy")
+    ap.add_argument("--slots", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests per row (default 24 quick / 64 full)")
+    ap.add_argument("--out", type=Path, default=ROOT / "BENCH_slo.json")
+    ap.add_argument("--trace", type=Path, default=None,
+                    help="also record a Chrome-trace JSON of the sweep")
+    args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace is not None:
+        from repro.obs import trace
+        tracer = trace.enable()
+    payload = run_sweep(quick=args.quick, backend=args.backend,
+                        slots=args.slots, seed=args.seed,
+                        n_requests=args.requests)
+    if tracer is not None:
+        from repro.obs import trace
+        trace.disable()
+        tracer.save(args.trace)
+        print(f"wrote {args.trace} ({len(tracer)} spans) — load it at "
+              f"https://ui.perfetto.dev", file=sys.stderr)
+    write_json(payload, args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -40,6 +40,9 @@ import time
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
+from ..obs import metrics as _metrics
+from ..obs.trace import span as _span
+
 SCHEMA = 1
 
 # env var naming the on-disk tunings table; unset -> in-process table only
@@ -236,12 +239,15 @@ def resolve_auto(cp, B: int, faults=None,
     specification, and fault-injected walls should never train the table.
     """
     if faults is not None:
+        _metrics.counter("autotune.resolve.faults").inc()
         return "numpy", None, "faults"
     table = table if table is not None else get_default_table()
     e = table.lookup(program_key(cp), batch_bucket(B))
     if e is not None and _runnable(e.backend):
+        _metrics.counter("autotune.resolve.measured").inc()
         return e.backend, e.max_batch, "measured"
     be, mb = heuristic(cp, B)
+    _metrics.counter("autotune.resolve.heuristic").inc()
     return be, mb, "heuristic"
 
 
@@ -291,17 +297,24 @@ def autotune_execute(cp, mems, table: Optional[TuningTable] = None,
     B = mems.shape[0] if mems.ndim == 3 else 1
     table = table if table is not None else get_default_table()
     best = None
-    for be, mb in candidates(cp, B, cheap=cheap):
-        res = execute(cp, mems, backend=be, max_batch=mb)  # warm (jit etc.)
-        us = None
-        for _ in range(max(1, reps)):
-            t0 = time.perf_counter()
-            res = execute(cp, mems, backend=be, max_batch=mb)
-            dt = (time.perf_counter() - t0) * 1e6
-            us = dt if us is None else min(us, dt)
-        if best is None or us < best[0]:
-            best = (us, be, mb, res)
-    us, be, mb, res = best
+    with _span("autotune.tune", key=program_key(cp),
+               bucket=batch_bucket(B)) as tune_sp:
+        for be, mb in candidates(cp, B, cheap=cheap):
+            with _span("autotune.probe", backend=be, max_batch=mb) as sp:
+                res = execute(cp, mems, backend=be, max_batch=mb)  # warm
+                us = None
+                for _ in range(max(1, reps)):
+                    t0 = time.perf_counter()
+                    res = execute(cp, mems, backend=be, max_batch=mb)
+                    dt = (time.perf_counter() - t0) * 1e6
+                    us = dt if us is None else min(us, dt)
+                sp.set(us=us)
+            _metrics.counter("autotune.probes").inc()
+            if best is None or us < best[0]:
+                best = (us, be, mb, res)
+        us, be, mb, res = best
+        tune_sp.set(winner=be, us=us)
+    _metrics.counter(f"autotune.wins.{be}" + (f"@{mb}" if mb else "")).inc()
     entry = table.record(program_key(cp), batch_bucket(B), be, us,
                          max_batch=mb)
     if save:

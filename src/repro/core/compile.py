@@ -48,11 +48,14 @@ always equals the unfused trace length, and final memory is bit-identical
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import metrics as _metrics
+from ..obs.trace import span as _span
 from .crossbar import SchedulingError, col_group, groups_disjoint, row_group
 from .isa import GATES, ColOp, InitOp, RowOp
 
@@ -439,6 +442,25 @@ def compile_program(
     >>> cp.n_cycles, cp.schedule.n_segments
     (2, 2)
     """
+    t0 = time.perf_counter()
+    with _span("compile.lower", rows=rows, cols=cols, fuse=fuse) as sp:
+        cp = _compile_impl(program, rows, cols, row_parts, col_parts,
+                           validate, fuse)
+        sp.set(cycles=cp.n_cycles)
+    _metrics.counter("compile.programs").inc()
+    _metrics.counter("compile.seconds").inc(time.perf_counter() - t0)
+    return cp
+
+
+def _compile_impl(
+    program: Sequence[Sequence[object]],
+    rows: int,
+    cols: int,
+    row_parts: int,
+    col_parts: int,
+    validate: bool,
+    fuse: bool,
+) -> CompiledProgram:
     assert rows % row_parts == 0 and cols % col_parts == 0
     rp_size, cp_size = rows // row_parts, cols // col_parts
     zero_col, zero_row = cols, rows  # extra always-0 cells

@@ -38,13 +38,16 @@ from __future__ import annotations
 
 import dataclasses
 import importlib.util
+import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
-# import-light by design (numpy only) — safe while this module initializes
+# import-light by design (numpy + stdlib-only obs) — safe at module init
 from ..device.faults import (FaultModel, FaultRealization, as_rng,
                              make_fault_source, sample_stuck_words)
+from ..obs import metrics as _metrics
+from ..obs.trace import span as _span
 from .compile import (MAX_FANIN, MODE_COL, MODE_INIT, MODE_ROW,
                       CompiledProgram)
 
@@ -589,6 +592,14 @@ def execute(
 ) -> EngineResult:
     """Replay ``cp`` over a batch of crossbars.
 
+    Telemetry: every call runs under a ``span("engine.execute")`` (no-op
+    unless tracing is enabled) and publishes into the ``repro.obs`` metrics
+    registry — ``engine.execute.calls[.<label>]`` counters, a per-resolved-
+    backend ``engine.execute.wall_us.<label>`` histogram, and fault-model
+    gauges (``engine.fault.p_*``) when a non-ideal :class:`FaultModel` is
+    supplied. The label is the result's ``backend`` field with any ``@mb``
+    chunking suffix stripped (e.g. ``auto:jax-fused``).
+
     ``mem`` is ``(B, rows, cols)`` (or ``(rows, cols)`` for B=1) uint8 initial
     state; the input is not mutated. Batches wider than one machine word (64
     for numpy, 32 for jax) — or than ``max_batch`` — are chunked; every chunk
@@ -631,6 +642,35 @@ def execute(
     ineligible programs or fault runs (``backend`` field
     ``"pallas:fallback-<base>"``).
     """
+    t0 = time.perf_counter()
+    with _span("engine.execute", backend=backend) as sp:
+        res = _execute_impl(cp, mem, backend, max_batch, faults, rng, tunings)
+        sp.set(resolved=res.backend, cycles=res.cycles)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    label = res.backend.split("@", 1)[0]
+    _metrics.counter("engine.execute.calls").inc()
+    _metrics.counter(f"engine.execute.calls.{label}").inc()
+    _metrics.histogram(f"engine.execute.wall_us.{label}").observe(wall_us)
+    if isinstance(faults, FaultModel) and not faults.is_ideal:
+        _metrics.counter("engine.execute.fault_runs").inc()
+        _metrics.gauge("engine.fault.p_sa0").set(faults.p_sa0)
+        _metrics.gauge("engine.fault.p_sa1").set(faults.p_sa1)
+        _metrics.gauge("engine.fault.p_switch").set(faults.p_switch)
+        _metrics.gauge("engine.fault.p_init").set(faults.p_init)
+    elif isinstance(faults, FaultRealization):
+        _metrics.counter("engine.execute.fault_runs").inc()
+    return res
+
+
+def _execute_impl(
+    cp: CompiledProgram,
+    mem: np.ndarray,
+    backend: str,
+    max_batch: Optional[int],
+    faults,
+    rng,
+    tunings,
+) -> EngineResult:
     from .fused import (build_jax_fused, build_jax_fused_real,
                         jax_fuse_eligible, run_numpy_fused, schedule_for)
 

@@ -1,0 +1,28 @@
+"""Zero-dependency telemetry for the MatPIM stack.
+
+Two complementary instruments, both stdlib-only so every layer (including
+the import-light engine) can use them without new dependencies:
+
+* :mod:`repro.obs.trace` — contextvar-propagated **span tracer** with
+  Chrome-trace/Perfetto JSON export. Disabled by default with a
+  near-zero-cost no-op path (guarded by ``$MATPIM_TRACE`` or
+  :func:`~repro.obs.trace.enable`); when enabled, nested ``span(...)``
+  blocks across serve → engine → compile become one loadable timeline.
+* :mod:`repro.obs.metrics` — process-wide **metrics registry** of
+  counters, gauges and fixed-bucket histograms with quantile readout,
+  exportable as a stable JSON snapshot. Always on (updates are a dict
+  lookup plus an integer add).
+
+``benchmarks/slo.py`` drives both under offered load; ``tools/
+trace_report.py`` summarizes a saved trace by self-time.
+"""
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, registry,
+                      reset_metrics, snapshot)
+from .trace import (Tracer, disable, enable, enabled, get_tracer, save,
+                    span)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "Tracer",
+    "disable", "enable", "enabled", "get_tracer", "registry",
+    "reset_metrics", "save", "snapshot", "span",
+]

@@ -55,6 +55,8 @@ from ..core.compile import RunnerCache
 from ..core.tiling import (TiledBinaryMatvec, TiledConv2d, TiledMatvec,
                            majority_sign)
 from ..device.faults import FaultModel, FaultRealization
+from ..obs import metrics as _metrics
+from ..obs.trace import span as _span
 
 
 def bucket_up(v: int, floor: int = 8) -> int:
@@ -77,6 +79,10 @@ class CacheStats:
     batches: int = 0       # execute_batch calls issued
     units: int = 0         # crossbar images executed (batch sizes summed)
     compile_s: float = 0.0  # wall time spent building/compiling plans (misses)
+    # wall of each plan's FIRST engine batch: backend tracing/compilation
+    # (jax jit etc.) that would otherwise be mis-attributed to steady-state
+    # execute. compile_s + warmup_s is the true cost of a cold plan.
+    warmup_s: float = 0.0
 
     @property
     def hit_rate(self) -> float:
@@ -100,9 +106,14 @@ class Ticket:
     result: object = None
     cycles: Optional[int] = None    # in-array program cycles (tiles lockstep)
     reduce_depth: int = 0           # host tree-reduction levels on top
-    wall_s: Optional[float] = None  # wall time of the engine batch serving it
+    # true per-request end-to-end latency: submit -> decode+finalize done.
+    # Includes queueing, so SLO percentiles over wall_s are honest; the
+    # shared engine-batch wall lives in batch_wall_s.
+    wall_s: Optional[float] = None
+    batch_wall_s: Optional[float] = None  # wall of the engine batch serving it
     batch_units: Optional[int] = None  # crossbars coalesced in that batch
     queue_steps: int = 0            # serve-loop steps spent waiting
+    submitted_s: Optional[float] = None  # perf_counter stamp at submit
     done: bool = False
 
 
@@ -200,18 +211,24 @@ class PlanService:
     def _on_plan_evict(self, wrapper) -> None:
         wrapper.plan.clear_caches()
         self.stats.evictions += 1
+        _metrics.counter("serve.cache.evictions").inc()
 
     def _get_plan(self, key: tuple, factory: Callable):
         w = self._plans.get(key)       # LRU touch on hit
         if w is not None:
             self.stats.hits += 1
+            _metrics.counter("serve.cache.hits").inc()
             return w
         self.stats.misses += 1
+        _metrics.counter("serve.cache.misses").inc()
         t0 = time.perf_counter()
-        w = factory()
-        if w.plan.program is not None:
-            w.plan.compile(fuse=self.fuse)   # pay lowering at miss time
-        self.stats.compile_s += time.perf_counter() - t0
+        with _span("serve.plan_build", key=repr(key)):
+            w = factory()
+            if w.plan.program is not None:
+                w.plan.compile(fuse=self.fuse)  # pay lowering at miss time
+        dt = time.perf_counter() - t0
+        self.stats.compile_s += dt
+        _metrics.counter("serve.compile_s").inc(dt)
         self._plans[key] = w           # may evict -> _on_plan_evict
         return w
 
@@ -251,7 +268,9 @@ class PlanService:
     def _ticket(self, kind: str, key: tuple, n_units: int) -> Ticket:
         self._uid += 1
         self.stats.requests += 1
-        return Ticket(uid=self._uid, kind=kind, key=key, n_units=n_units)
+        _metrics.counter("serve.requests").inc()
+        return Ticket(uid=self._uid, kind=kind, key=key, n_units=n_units,
+                      submitted_s=time.perf_counter())
 
     def _enqueue(self, ticket, wrapper, load, decode, finalize, faults):
         if isinstance(faults, FaultRealization) \
@@ -432,6 +451,7 @@ class PlanService:
             key = at.program_key(cp)
             bucket = at.batch_bucket(mems.shape[0])
             if self.autotune and table.lookup(key, bucket) is None:
+                _metrics.counter("serve.inline_tunes").inc()
                 res, _ = at.autotune_execute(cp, mems, table, cheap=True)
                 return res
             t0 = time.perf_counter()
@@ -453,48 +473,70 @@ class PlanService:
         w = pends[0].wrapper
         plan = w.plan
         units = sum(p.ticket.n_units for p in pends)
-        mems = np.zeros((units, plan.rows, plan.cols), dtype=np.uint8)
-        off = 0
-        for p in pends:
-            for b in range(p.ticket.n_units):
-                p.load(b, mems[off + b])
-            off += p.ticket.n_units
-        faults = rng = None
-        if pends[0].faults is not None:
-            if isinstance(pends[0].faults, FaultRealization):
-                faults = _concat_realizations([p.faults for p in pends])
-            else:
-                faults, rng = pends[0].faults, self._rng
-        t0 = time.perf_counter()
-        res = self._execute_bucket(plan, mems, faults, rng)
-        wall = time.perf_counter() - t0
-        done = []
-        off = 0
-        for p in pends:
-            partials = [p.decode(b, res.mem[off + b])
-                        for b in range(p.ticket.n_units)]
-            off += p.ticket.n_units
-            t = p.ticket
-            t.result, t.reduce_depth = p.finalize(partials)
-            t.cycles = res.cycles
-            t.wall_s = wall
-            t.batch_units = units
-            # steps the request sat queued before the one that served it
-            t.queue_steps = max(0, self._step - p.submitted_step - 1)
-            t.done = True
-            done.append(t)
-            self._queue.remove(p)
+        with _span("serve.bucket", kind=pends[0].ticket.kind, units=units,
+                   requests=len(pends)):
+            with _span("serve.load", units=units):
+                mems = np.zeros((units, plan.rows, plan.cols), dtype=np.uint8)
+                off = 0
+                for p in pends:
+                    for b in range(p.ticket.n_units):
+                        p.load(b, mems[off + b])
+                    off += p.ticket.n_units
+            faults = rng = None
+            if pends[0].faults is not None:
+                if isinstance(pends[0].faults, FaultRealization):
+                    faults = _concat_realizations([p.faults for p in pends])
+                else:
+                    faults, rng = pends[0].faults, self._rng
+            warm_up = not getattr(w, "_served_once", False)
+            t0 = time.perf_counter()
+            res = self._execute_bucket(plan, mems, faults, rng)
+            wall = time.perf_counter() - t0
+            if warm_up:
+                # first engine batch through this plan pays backend tracing /
+                # jit compilation: account it as warm-up, not steady state
+                w._served_once = True
+                self.stats.warmup_s += wall
+                _metrics.counter("serve.warmup_s").inc(wall)
+            done = []
+            with _span("serve.decode", units=units):
+                off = 0
+                for p in pends:
+                    partials = [p.decode(b, res.mem[off + b])
+                                for b in range(p.ticket.n_units)]
+                    off += p.ticket.n_units
+                    t = p.ticket
+                    t.result, t.reduce_depth = p.finalize(partials)
+                    t.cycles = res.cycles
+                    t.batch_wall_s = wall
+                    t.wall_s = (time.perf_counter() - t.submitted_s
+                                if t.submitted_s is not None else wall)
+                    t.batch_units = units
+                    # steps the request sat queued before the one serving it
+                    t.queue_steps = max(0, self._step - p.submitted_step - 1)
+                    t.done = True
+                    _metrics.histogram("serve.request_latency_us") \
+                        .observe(t.wall_s * 1e6)
+                    _metrics.histogram("serve.queue_steps") \
+                        .observe(t.queue_steps)
+                    done.append(t)
+                    self._queue.remove(p)
         self.stats.batches += 1
         self.stats.units += units
+        _metrics.counter("serve.batches").inc()
+        _metrics.counter("serve.units").inc(units)
+        _metrics.histogram("serve.batch_units").observe(units)
         return done
 
     def flush(self) -> List[Ticket]:
         """Run every pending request, one coalesced batch per bucket."""
         done = []
-        while self._queue:
-            self._step += 1
-            buckets = self._buckets()
-            done.extend(self._run_bucket(next(iter(buckets.values()))))
+        with _span("serve.flush", pending_units=self.pending_units):
+            while self._queue:
+                self._step += 1
+                buckets = self._buckets()
+                done.extend(self._run_bucket(next(iter(buckets.values()))))
+        _metrics.gauge("serve.queue_depth_units").set(0)
         return done
 
     def step(self, max_units: Optional[int] = None) -> List[Ticket]:
@@ -508,6 +550,7 @@ class PlanService:
         """
         if not self._queue:
             return []
+        _metrics.gauge("serve.queue_depth_units").set(self.pending_units)
         self._step += 1
         buckets = self._buckets().values()
 
@@ -528,7 +571,13 @@ class PlanService:
                 take.append(p)
                 acc += p.ticket.n_units
             pends = take
-        return self._run_bucket(pends)
+        with _span("serve.step", step=self._step,
+                   pending_units=self.pending_units,
+                   starved=bool(starved)):
+            done = self._run_bucket(pends)
+        _metrics.counter("serve.steps").inc()
+        _metrics.gauge("serve.queue_depth_units").set(self.pending_units)
+        return done
 
     def run_stream(self, requests: Iterable[ServeRequest], slots: int = 64,
                    max_units: Optional[int] = None) -> List[Ticket]:
@@ -537,8 +586,10 @@ class PlanService:
         Mirrors the slot model of ``serve/engine.py``: admit requests until
         ``slots`` crossbar units are in flight, execute the fullest bucket
         (:meth:`step`), repeat until the stream and the queue drain. Every
-        returned ticket carries its latency in cycles, the wall time and
-        size of the batch that served it, and how many steps it queued.
+        returned ticket carries its latency in cycles, its true end-to-end
+        wall latency (``wall_s``: submit → decode done), the wall and size
+        of the engine batch that served it (``batch_wall_s`` /
+        ``batch_units``), and how many steps it queued.
         """
         if slots < 1:
             raise ValueError(f"slots={slots}: need at least one in-flight "
@@ -546,19 +597,23 @@ class PlanService:
         it = iter(requests)
         exhausted = False
         tickets: List[Ticket] = []
-        while True:
-            while not exhausted and self.pending_units < slots:
-                try:
-                    r = next(it)
-                except StopIteration:
-                    exhausted = True
-                    break
-                tickets.append(self.submit(r.kind, *r.args, **r.kwargs))
-            if not self._queue:
-                if exhausted:
-                    break
-                continue
-            self.step(max_units=max_units or slots)
+        with _span("serve.stream", slots=slots) as sp:
+            while True:
+                with _span("serve.admit", slots=slots):
+                    while not exhausted and self.pending_units < slots:
+                        try:
+                            r = next(it)
+                        except StopIteration:
+                            exhausted = True
+                            break
+                        tickets.append(
+                            self.submit(r.kind, *r.args, **r.kwargs))
+                if not self._queue:
+                    if exhausted:
+                        break
+                    continue
+                self.step(max_units=max_units or slots)
+            sp.set(requests=len(tickets))
         return tickets
 
 

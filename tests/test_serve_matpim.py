@@ -337,6 +337,80 @@ def test_run_stream_continuous_batching():
     assert svc.stats.batches >= 3          # slot budget forced several steps
 
 
+def test_run_stream_accounting_shuffled_heterogeneous():
+    """run_stream bookkeeping under a shuffled mixed-shape stream: per-ticket
+    queue_steps / batch_units stay within the slot budget's implications and
+    the aggregate CacheStats counters reconcile exactly."""
+    rng = np.random.default_rng(11)
+    base = _mixed_requests(rng, 14)
+    order = rng.permutation(len(base))
+    reqs = [ServeRequest(*base[i]) for i in order]
+    svc = PlanService(**GEOM)
+    slots = 6
+    tickets = svc.run_stream(iter(reqs), slots=slots)
+
+    assert len(tickets) == len(reqs) and all(t.done for t in tickets)
+    for t, i in zip(tickets, order):
+        want = _oracle(*base[i])
+        assert np.array_equal(np.asarray(t.result, dtype=object),
+                              np.asarray(want, dtype=object))
+    # aggregate accounting reconciles with the per-ticket view
+    assert svc.stats.requests == len(reqs)
+    assert svc.stats.units == sum(t.n_units for t in tickets)
+    assert svc.stats.batches == len({(t.key, t.batch_wall_s)
+                                     for t in tickets})
+    # slot occupancy: admission stops once pending_units reaches the slot
+    # budget, so no batch exceeds slots + (largest single request - 1)
+    max_units = max(t.n_units for t in tickets)
+    assert all(t.batch_units <= slots + max_units - 1 for t in tickets)
+    assert any(t.batch_units > 1 for t in tickets)   # it actually coalesced
+    # queue_steps: bounded by the number of steps the loop actually ran
+    assert all(0 <= t.queue_steps <= svc._step for t in tickets)
+    assert svc.pending_units == 0
+
+
+def test_wall_s_measures_submit_to_decode_latency():
+    """Regression: wall_s used to be the engine-batch wall, identical for
+    every ticket in a batch. It is now true per-request latency (submit ->
+    decoded), so a ticket that sat in the queue shows the queueing time;
+    the batch wall moved to batch_wall_s."""
+    import time
+    rng = np.random.default_rng(12)
+    svc = PlanService(**GEOM)
+    A = rng.choice([-1, 1], size=(4, 8))
+    x = rng.choice([-1, 1], size=8)
+    t = svc.submit_binary_matvec(A, x)
+    time.sleep(0.05)                         # request waits in the queue
+    svc.flush()
+    assert t.wall_s >= 0.05                  # queueing is part of latency
+    assert t.batch_wall_s is not None and t.batch_wall_s < t.wall_s
+    assert t.batch_wall_s > 0
+
+
+def test_warmup_s_accrues_only_on_first_execution_per_plan():
+    """Regression: a plan's first engine batch (jit tracing etc.) used to be
+    priced as steady-state execute time. It now lands in stats.warmup_s,
+    once per cached plan, again after eviction forces a rebuild."""
+    rng = np.random.default_rng(13)
+    svc = PlanService(max_plans=1, bucket=False, **GEOM)
+    A = rng.choice([-1, 1], size=(4, 8))
+    x = rng.choice([-1, 1], size=8)
+    svc.submit_binary_matvec(A, x)
+    svc.flush()
+    first = svc.stats.warmup_s
+    assert first > 0
+    svc.submit_binary_matvec(A, x)           # same plan, warm now
+    svc.flush()
+    assert svc.stats.warmup_s == first
+    # evict the plan; the rebuilt plan warms up again
+    svc.submit_binary_matvec(rng.choice([-1, 1], size=(4, 12)),
+                             rng.choice([-1, 1], size=12))
+    svc.flush()
+    svc.submit_binary_matvec(A, x)
+    svc.flush()
+    assert svc.stats.evictions >= 2 and svc.stats.warmup_s > first
+
+
 def test_minority_bucket_not_starved():
     """Fullest-first alone would starve a lone odd-shaped request under a
     sustained popular stream; aging bounds its queue delay."""

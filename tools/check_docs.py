@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import doctest
 import importlib
+import importlib.util
 import re
 import sys
 import traceback
@@ -40,7 +41,13 @@ DOCTEST_MODULES = [
     "repro.device.faults",
     "repro.apps.pipeline",
     "repro.apps.imaging",
+    "repro.obs.trace",
+    "repro.obs.metrics",
 ]
+
+# scripts outside the package tree (tools/ is not a package) whose module
+# docstrings carry contractual examples; loaded by file path
+DOCTEST_FILES = ["tools/trace_report.py"]
 
 SNIPPET_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/ALGORITHMS.md"]
 
@@ -49,8 +56,17 @@ FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
 
 def run_doctests() -> tuple:
     failed = attempted = 0
-    for name in DOCTEST_MODULES:
-        mod = importlib.import_module(name)
+    mods = [(name, importlib.import_module(name))
+            for name in DOCTEST_MODULES]
+    for rel in DOCTEST_FILES:
+        spec = importlib.util.spec_from_file_location(
+            Path(rel).stem, ROOT / rel)
+        mod = importlib.util.module_from_spec(spec)
+        # dataclasses (and pickling) resolve the module through sys.modules
+        sys.modules[spec.name] = mod
+        spec.loader.exec_module(mod)
+        mods.append((rel, mod))
+    for name, mod in mods:
         res = doctest.testmod(mod, verbose=False)
         failed += res.failed
         attempted += res.attempted

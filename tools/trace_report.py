@@ -1,0 +1,100 @@
+"""Summarize a Chrome-trace JSON (repro.obs.trace output) by self-time.
+
+Spans nest by time containment within a thread track, so a span's *self*
+time is its duration minus the durations of its direct children — the
+number that says where wall time actually went, not just which outermost
+spans were open.
+
+    PYTHONPATH=src python tools/trace_report.py results/slo_trace.json [-n 20]
+
+The core aggregation is :func:`summarize`:
+
+>>> evs = [
+...     {"name": "outer", "ts": 0.0, "dur": 100.0, "tid": 1},
+...     {"name": "inner", "ts": 10.0, "dur": 30.0, "tid": 1},
+...     {"name": "inner", "ts": 50.0, "dur": 20.0, "tid": 1},
+... ]
+>>> for r in summarize(evs):
+...     print(r.name, r.count, r.total_us, r.self_us)
+inner 2 50.0 50.0
+outer 1 100.0 50.0
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from collections import defaultdict
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class SpanRow:
+    name: str
+    count: int = 0
+    total_us: float = 0.0   # summed durations (children included)
+    self_us: float = 0.0    # summed durations minus direct children
+
+
+def summarize(events: List[dict]) -> List[SpanRow]:
+    """Aggregate complete events (``ph: "X"``) into per-name rows, sorted by
+    self-time descending (ties by name).
+
+    Parent/child relations are reconstructed per ``tid`` from time
+    containment: sorting by ``(ts, -dur)`` visits parents before the
+    children they enclose, and a stack of still-open spans attributes each
+    child's duration against its *direct* parent only.
+    """
+    rows: Dict[str, SpanRow] = defaultdict(lambda: SpanRow(""))
+    by_tid: Dict[object, List[dict]] = defaultdict(list)
+    for e in events:
+        if e.get("ph", "X") != "X" or "dur" not in e:
+            continue
+        by_tid[e.get("tid")].append(e)
+    for evs in by_tid.values():
+        evs.sort(key=lambda e: (e["ts"], -e["dur"]))
+        stack: List[dict] = []      # open spans, outermost first
+        for e in evs:
+            while stack and stack[-1]["ts"] + stack[-1]["dur"] <= e["ts"]:
+                stack.pop()
+            r = rows[e["name"]]
+            r.name = e["name"]
+            r.count += 1
+            r.total_us += e["dur"]
+            r.self_us += e["dur"]
+            if stack:
+                rows[stack[-1]["name"]].self_us -= e["dur"]
+            stack.append(e)
+    return sorted(rows.values(), key=lambda r: (-r.self_us, r.name))
+
+
+def load_events(path: str) -> List[dict]:
+    """Read a trace file: the Chrome-trace object form (``traceEvents``) or
+    a bare JSON array of events."""
+    with open(path) as f:
+        d = json.load(f)
+    return d["traceEvents"] if isinstance(d, dict) else d
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome-trace JSON file")
+    ap.add_argument("-n", "--top", type=int, default=20,
+                    help="rows to show (default 20)")
+    args = ap.parse_args(argv)
+    events = load_events(args.trace)
+    rows = summarize(events)
+    grand = sum(r.self_us for r in rows) or 1.0
+    print(f"{len(events)} events, {len(rows)} span names, "
+          f"{grand/1e3:.1f} ms total self-time\n")
+    print(f"{'span':<32} {'count':>7} {'total ms':>10} {'self ms':>10} "
+          f"{'self %':>7}")
+    for r in rows[:args.top]:
+        print(f"{r.name:<32} {r.count:>7} {r.total_us/1e3:>10.2f} "
+              f"{r.self_us/1e3:>10.2f} {100*r.self_us/grand:>6.1f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
