@@ -277,6 +277,11 @@ def auto_vs_fixed_table() -> list:
 SLO_ROW_KEYS = ("mode", "load_factor", "offered_rps", "achieved_rps",
                 "requests", "p50_ms", "p95_ms", "p99_ms",
                 "mean_queue_units", "max_queue_units", "hit_rate", "batches")
+SLO_COLD_KEYS = ("warm_wall_s", "compile_s", "warmup_s")
+SLO_RESTART_KEYS = ("requests", "replay_wall_s", "first_batch_ms",
+                    "steady_p95_ms", "compile_s", "warmup_s", "store_hits",
+                    "misses", "compile_programs", "p50_ms", "p95_ms",
+                    "p99_ms")
 
 
 def validate_slo(payload: dict) -> list:
@@ -284,13 +289,30 @@ def validate_slo(payload: dict) -> list:
 
     The contract: ≥3 offered-load rows, every row carries the full
     latency/throughput/queue/hit-rate column set, percentiles are ordered,
-    and exactly one row is the closed-loop capacity measurement.
+    exactly one row is the closed-loop capacity measurement, and the
+    payload carries both a ``cold_start`` account and a ``warm_restart``
+    block proving the plan-store replay ran compile-free.
     """
     errs = []
     if payload.get("schema") != 1:
         errs.append(f"schema {payload.get('schema')!r} != 1")
     if payload.get("bench") != "slo":
         errs.append(f"bench {payload.get('bench')!r} != 'slo'")
+    cold = payload.get("cold_start")
+    if not isinstance(cold, dict) \
+            or any(k not in cold for k in SLO_COLD_KEYS):
+        errs.append(f"cold_start block missing/incomplete: {cold!r}")
+    wr = payload.get("warm_restart")
+    if not isinstance(wr, dict):
+        errs.append("missing warm_restart block (slo.py always emits one)")
+    else:
+        missing = [k for k in SLO_RESTART_KEYS if k not in wr]
+        if missing:
+            errs.append(f"warm_restart missing keys: {missing}")
+        elif wr["compile_programs"] != 0:
+            errs.append(
+                f"warm_restart ran {wr['compile_programs']} compiles — the "
+                f"plan-store replay must be compile-free")
     rows = payload.get("rows")
     if not isinstance(rows, list) or len(rows) < 3:
         errs.append(f"need >=3 offered-load rows, got "
@@ -350,6 +372,19 @@ def slo_table() -> list:
               f"{r['hit_rate']:.3f} |")
 
     warnings = []
+    wr = cur.get("warm_restart") or {}
+    if wr:
+        print(f"\nwarm restart (plan store replay): first batch "
+              f"{wr['first_batch_ms']:.2f} ms vs steady p95 "
+              f"{wr['steady_p95_ms']:.2f} ms, {wr['store_hits']}/"
+              f"{wr['misses']} store hits, {wr['compile_programs']} "
+              f"compiles, replay {wr['replay_wall_s']:.2f} s")
+        if wr["first_batch_ms"] > 2 * wr["steady_p95_ms"]:
+            warnings.append(
+                f"WARNING: warm-restart first batch "
+                f"{wr['first_batch_ms']:.2f} ms exceeds 2x steady-state "
+                f"p95 ({wr['steady_p95_ms']:.2f} ms) — store replay is "
+                f"not restoring steady-state latency")
     try:
         prev = json.loads(subprocess.run(
             ["git", "show", "HEAD:BENCH_slo.json"], cwd=ROOT,
@@ -363,6 +398,15 @@ def slo_table() -> list:
               f"quick={prev.get('quick')} — p95 deltas not comparable, "
               f"skipping)")
         return warnings
+    pc, cc = prev.get("cold_start") or {}, cur.get("cold_start") or {}
+    for k in SLO_COLD_KEYS:
+        pv, cv = pc.get(k), cc.get(k)
+        if pv and cv is not None:
+            delta = (cv - pv) / pv * 100
+            if delta > REGRESSION_PCT:
+                warnings.append(
+                    f"WARNING: slo cold_start {k} regressed {delta:+.1f}% "
+                    f"({pv:.2f} -> {cv:.2f} s)")
     prev_rows = {_slo_row_key(r): r for r in prev.get("rows", [])
                  if all(k in r for k in SLO_ROW_KEYS)}
     for r in cur["rows"]:

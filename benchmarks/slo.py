@@ -17,17 +17,23 @@ not just best-case batched wall time.
 
 Output is ``BENCH_slo.json`` at the repo root — one row per (mode, load
 factor) with p50/p95/p99 latency, achieved throughput, queue depth, plan-
-cache hit rate and batch count; ``benchmarks/report.py`` validates the
-schema and delta-flags p95 regressions. ``--trace FILE`` additionally
-records a Chrome-trace/Perfetto span timeline of the whole sweep.
+cache hit rate and batch count — plus a ``warm_restart`` block: a fresh
+service rebuilt from the persistent plan store replays the sweep traffic
+with zero compiles, pinning restart latency. ``benchmarks/report.py``
+validates the schema and delta-flags p95/cold-start regressions.
+``--trace FILE`` additionally records a Chrome-trace/Perfetto span
+timeline of the whole sweep; ``--store DIR`` persists the plan store
+across invocations (run twice on one path for a true cross-process warm
+restart).
 
-    PYTHONPATH=src python -m benchmarks.slo [--quick] [--trace FILE]
+    PYTHONPATH=src python -m benchmarks.slo [--quick] [--store DIR]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+import tempfile
 import time
 from pathlib import Path
 from typing import Dict, List, Optional
@@ -156,21 +162,75 @@ def open_loop(svc, requests, offered_rps: float, load_factor: float,
     return row
 
 
+def warm_restart_probe(store_path: Path, reqs, slots: int, backend: str,
+                       steady_p95_ms: float, log=print) -> dict:
+    """Restart realism: a FRESH service rebuilt on the populated plan store
+    replays the sweep's traffic with ZERO ``compile_program`` calls, and its
+    very first request should land near steady-state latency (the block
+    records both so ``report.py`` can flag drift)."""
+    from repro.obs import metrics
+    from repro.serve.matpim import PlanService
+    from repro.serve.plan_store import PlanStore
+
+    base = metrics.counter("compile.programs").value
+    svc = PlanService(rows=64, cols=256, parts=8, backend=backend,
+                      max_plans=64, store=PlanStore(store_path))
+    # first-batch latency: admit one slot window on the cold-restarted
+    # service and time until the first batch of results lands — store
+    # loads + runner build + execute for exactly that batch, with no
+    # steady-state queueing from the rest of the stream mixed in
+    it = iter(reqs)
+    head = [r for _, r in zip(range(8), it)]
+    t0 = time.perf_counter()
+    tickets = [svc.submit(r.kind, *r.args, **r.kwargs) for r in head]
+    first_done = svc.step(max_units=slots)
+    first_batch_s = time.perf_counter() - t0
+    assert first_done, "restart probe: first step produced no results"
+    tickets += svc.run_stream(it, slots=slots)   # drain the remainder
+    wall = time.perf_counter() - t0
+    svc.close()
+    lat = [t.wall_s for t in tickets]
+    block = {"requests": len(tickets), "replay_wall_s": wall,
+             "first_batch_ms": float(first_batch_s * 1e3),
+             "steady_p95_ms": float(steady_p95_ms),
+             "compile_s": svc.stats.compile_s,
+             "warmup_s": svc.stats.warmup_s,
+             "store_hits": svc.stats.store_hits,
+             "misses": svc.stats.misses,
+             "compile_programs": int(
+                 metrics.counter("compile.programs").value - base)}
+    block.update(_percentiles_ms(lat))
+    log(f"warm restart: {len(tickets)} reqs in {wall:.2f}s, first batch "
+        f"{block['first_batch_ms']:.2f} ms vs steady p95 "
+        f"{steady_p95_ms:.2f} ms, {block['store_hits']} store hits, "
+        f"{block['compile_programs']} compiles", file=sys.stderr)
+    return block
+
+
 def run_sweep(quick: bool = False, backend: str = "numpy", slots: int = 32,
               seed: int = 0, n_requests: Optional[int] = None,
-              log=print) -> dict:
-    """The full sweep: warm-up, closed-loop capacity, open-loop factors.
+              store: Optional[Path] = None, log=print) -> dict:
+    """The full sweep: warm-up, closed-loop capacity, open-loop factors,
+    then a warm-restart probe against the persistent plan store.
 
     One warm service serves every row (plan cache + jit warm, per-row stats
     reset), so rows measure steady-state serving, not first-compile cost —
-    that cost is reported separately as ``warmup_s``/``compile_s``.
+    that cost is reported separately as ``warmup_s``/``compile_s``. The
+    warm-up pass also populates ``store`` (an ephemeral directory when none
+    is given), and the final ``warm_restart`` block replays the traffic on
+    a fresh service rebuilt from it.
     """
     from repro.serve.matpim import CacheStats, PlanService
+    from repro.serve.plan_store import PlanStore
 
     rng = np.random.default_rng(seed)
     n = n_requests or (24 if quick else 64)
+    store_tmp = None
+    if store is None:
+        store_tmp = tempfile.TemporaryDirectory(prefix="matpim-slo-store-")
+        store = Path(store_tmp.name)
     svc = PlanService(rows=64, cols=256, parts=8, backend=backend,
-                      max_plans=64)
+                      max_plans=64, store=PlanStore(store))
 
     # one request set for every row (shuffled per row): the warm-up pass
     # compiles exactly the plans the rows exercise, so no row pays a cold
@@ -185,7 +245,8 @@ def run_sweep(quick: bool = False, backend: str = "numpy", slots: int = 32,
     svc.run_stream(iter(reqs), slots=slots)    # compile + jit every bucket
     warm_wall = time.perf_counter() - t0
     cold = {"warm_wall_s": warm_wall, "compile_s": svc.stats.compile_s,
-            "warmup_s": svc.stats.warmup_s}
+            "warmup_s": svc.stats.warmup_s,
+            "store_hits": svc.stats.store_hits}
     log(f"warm-up: {n} reqs in {warm_wall:.2f}s "
         f"(compile {svc.stats.compile_s:.2f}s, "
         f"jit warm-up {svc.stats.warmup_s:.2f}s)", file=sys.stderr)
@@ -209,10 +270,17 @@ def run_sweep(quick: bool = False, backend: str = "numpy", slots: int = 32,
             f"p95 {row['p95_ms']:.2f} ms, "
             f"queue mean {row['mean_queue_units']:.1f}", file=sys.stderr)
 
+    try:
+        restart = warm_restart_probe(store, reqs, slots, backend,
+                                     steady_p95_ms=closed["p95_ms"], log=log)
+    finally:
+        if store_tmp is not None:
+            store_tmp.cleanup()
+
     return {"schema": SCHEMA, "bench": "slo", "quick": bool(quick),
             "generated_by": "benchmarks/slo.py", "backend": backend,
             "slots": int(slots), "requests_per_row": n, "cold_start": cold,
-            "capacity_rps": cap, "rows": rows}
+            "warm_restart": restart, "capacity_rps": cap, "rows": rows}
 
 
 def write_json(payload: dict, path: Path) -> None:
@@ -229,6 +297,10 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=None,
                     help="requests per row (default 24 quick / 64 full)")
     ap.add_argument("--out", type=Path, default=ROOT / "BENCH_slo.json")
+    ap.add_argument("--store", type=Path, default=None,
+                    help="persistent plan-store dir (kept across runs: a "
+                         "second invocation on the same path measures a "
+                         "true warm restart; default is an ephemeral dir)")
     ap.add_argument("--trace", type=Path, default=None,
                     help="also record a Chrome-trace JSON of the sweep")
     args = ap.parse_args(argv)
@@ -239,7 +311,7 @@ def main(argv=None) -> int:
         tracer = trace.enable()
     payload = run_sweep(quick=args.quick, backend=args.backend,
                         slots=args.slots, seed=args.seed,
-                        n_requests=args.requests)
+                        n_requests=args.requests, store=args.store)
     if tracer is not None:
         from repro.obs import trace
         trace.disable()

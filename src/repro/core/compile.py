@@ -418,6 +418,173 @@ def fuse_program(cp: CompiledProgram) -> FusedSchedule:
     return FusedSchedule(segments=segments, n_cycles=cp.n_cycles)
 
 
+# ---------------------------------------------------------------------------
+# Plan (de)serialization: compiled traces + fused schedules as flat arrays
+# ---------------------------------------------------------------------------
+
+# bumped whenever the CompiledProgram/FusedSchedule array layout changes;
+# the plan store embeds it so stale on-disk entries load as misses
+STATE_SCHEMA = 1
+
+# the trace arrays a CompiledProgram is made of, in dataclass order
+_CP_ARRAY_FIELDS = ("mode", "nops", "gate", "dst", "ins", "sel",
+                    "init_r", "init_c", "init_v", "row_masks", "col_masks")
+
+
+def schedule_state(sched: FusedSchedule) -> Dict[str, np.ndarray]:
+    """Flatten a :class:`FusedSchedule` into named ndarrays.
+
+    Segments concatenate along a single axis per field (`seg_meta` carries
+    each segment's ``(mode, t0, t1, W, n_spans)`` so the per-segment slices
+    reconstruct from ``L = t1 - t0`` and ``W``); everything is a plain
+    integer array — no pickling anywhere in the persistence path.
+    """
+    segs = sched.segments
+    seg_meta = np.array(
+        [[s.mode, s.t0, s.t1, s.W, len(s.spans)] for s in segs],
+        dtype=np.int64).reshape(len(segs), 5)
+    spans = np.array([sp for s in segs for sp in s.spans],
+                     dtype=np.int64).reshape(-1, 2)
+
+    def cat(field, dtype):
+        parts = [getattr(s, field).reshape(-1) for s in segs]
+        return (np.concatenate(parts).astype(dtype, copy=False)
+                if parts else np.zeros(0, dtype))
+
+    return {
+        "seg_meta": seg_meta,
+        "seg_nops": cat("nops", np.int32),
+        "seg_gate": cat("gate", np.int8),
+        "seg_dst": cat("dst", np.int32),
+        "seg_ins": cat("ins", np.int32),
+        "seg_sel": cat("sel", np.int32),
+        "seg_perm": cat("perm", np.int32),
+        "seg_spans": spans,
+        "seg_n_cycles": np.int64(sched.n_cycles),
+    }
+
+
+def schedule_from_state(arrays: Dict[str, np.ndarray]) -> FusedSchedule:
+    """Rebuild a :class:`FusedSchedule` from :func:`schedule_state` arrays.
+
+    Raises ``ValueError``/``KeyError`` on any layout inconsistency — the
+    plan store treats both as a corrupt entry (a cache miss), never as a
+    served result.
+    """
+    seg_meta = np.asarray(arrays["seg_meta"], np.int64).reshape(-1, 5)
+    nops_a = np.asarray(arrays["seg_nops"])
+    gate_a = np.asarray(arrays["seg_gate"])
+    dst_a = np.asarray(arrays["seg_dst"])
+    ins_a = np.asarray(arrays["seg_ins"])
+    sel_a = np.asarray(arrays["seg_sel"])
+    perm_a = np.asarray(arrays["seg_perm"])
+    spans_a = np.asarray(arrays["seg_spans"]).reshape(-1, 2)
+    # pre-materialize span tuples once: tolist()+zip beats per-element
+    # int() over numpy scalars by ~10x, and this loop dominates the
+    # restart-path deserialization wall for long conv traces
+    span_pairs = list(zip(spans_a[:, 0].tolist(), spans_a[:, 1].tolist()))
+
+    def take(arr, n, shape, off):
+        flat = arr[off:off + n]
+        if flat.size != n:
+            raise ValueError(f"segment array truncated: need {n} past {off}")
+        return np.ascontiguousarray(flat.reshape(shape))
+
+    segments: List[Segment] = []
+    o1 = o2 = o3 = osp = 0      # offsets: (L,), (L,W), (L,W,5), spans
+    for mode, t0, t1, W, nsp in seg_meta.tolist():
+        L = t1 - t0
+        if L <= 0 or W <= 0 or nsp <= 0:
+            raise ValueError(f"bad segment meta L={L} W={W} n_spans={nsp}")
+        spans = span_pairs[osp:osp + nsp]
+        if len(spans) != nsp:
+            raise ValueError("seg_spans truncated")
+        segments.append(Segment(
+            mode=mode, t0=t0, t1=t1, W=W,
+            nops=take(nops_a, L, (L,), o1),
+            gate=take(gate_a, L * W, (L, W), o2),
+            dst=take(dst_a, L * W, (L, W), o2),
+            ins=take(ins_a, L * W * MAX_FANIN, (L, W, MAX_FANIN), o3),
+            sel=take(sel_a, L * W, (L, W), o2),
+            perm=take(perm_a, L * W, (L, W), o2),
+            spans=spans))
+        o1 += L
+        o2 += L * W
+        o3 += L * W * MAX_FANIN
+        osp += nsp
+    return FusedSchedule(segments=segments,
+                         n_cycles=int(arrays["seg_n_cycles"]))
+
+
+def compiled_state(cp: CompiledProgram) -> Tuple[dict, Dict[str, np.ndarray]]:
+    """Split ``cp`` into a JSON-able meta dict + a flat dict of ndarrays.
+
+    The inverse is :func:`compiled_from_state`; together they are the
+    persistence surface the :mod:`repro.serve.plan_store` writes as one
+    ``np.savez`` entry. Executor caches (``_caches``) and the pallas layout
+    manifest are *derived* state and deliberately not serialized — the
+    owning plan reattaches them via ``CrossbarPlan.adopt_compiled``.
+
+    >>> from .isa import ColOp, InitOp
+    >>> prog = [[InitOp(slice(None), [0, 1], 0)],
+    ...         [ColOp("NOT", (0,), 1, None)]]
+    >>> cp = compile_program(prog, 8, 8, 1, 1)
+    >>> cp2 = compiled_from_state(*compiled_state(cp))
+    >>> (cp2.n_cycles, cp2.schedule.n_segments) == (2, 2)
+    True
+    >>> bool((cp2.ins == cp.ins).all() and cp2.stats == cp.stats)
+    True
+    """
+    meta = {
+        "state_schema": STATE_SCHEMA,
+        "rows": cp.rows, "cols": cp.cols, "n_cycles": cp.n_cycles,
+        "W": cp.W, "I": cp.I,
+        "stats": {k: int(v) for k, v in cp.stats.items()},
+        "fused": cp.schedule is not None,
+    }
+    arrays = {name: getattr(cp, name) for name in _CP_ARRAY_FIELDS}
+    if cp.schedule is not None:
+        arrays.update(schedule_state(cp.schedule))
+    return meta, arrays
+
+
+def compiled_from_state(meta: dict,
+                        arrays: Dict[str, np.ndarray]) -> CompiledProgram:
+    """Rebuild a :class:`CompiledProgram` from :func:`compiled_state` parts.
+
+    Validates the state schema and the core array shapes so a truncated or
+    hand-edited blob raises ``ValueError`` instead of constructing a trace
+    the executors would misreplay.
+    """
+    if meta.get("state_schema") != STATE_SCHEMA:
+        raise ValueError(f"compiled-state schema {meta.get('state_schema')!r}"
+                         f" != {STATE_SCHEMA}")
+    T, W, I = int(meta["n_cycles"]), int(meta["W"]), int(meta["I"])
+    kw = {name: np.ascontiguousarray(arrays[name])
+          for name in _CP_ARRAY_FIELDS}
+    expect = {"mode": (T,), "nops": (T,), "gate": (T, W), "dst": (T, W),
+              "ins": (T, W, MAX_FANIN), "sel": (T, W), "init_r": (T, I),
+              "init_c": (T, I), "init_v": (T, I)}
+    for name, shape in expect.items():
+        if kw[name].shape != shape:
+            raise ValueError(
+                f"{name} shape {kw[name].shape} != expected {shape}")
+    rows, cols = int(meta["rows"]), int(meta["cols"])
+    if kw["row_masks"].ndim != 2 or kw["row_masks"].shape[1] != rows + 1:
+        raise ValueError(f"row_masks shape {kw['row_masks'].shape}")
+    if kw["col_masks"].ndim != 2 or kw["col_masks"].shape[1] != cols + 1:
+        raise ValueError(f"col_masks shape {kw['col_masks'].shape}")
+    cp = CompiledProgram(
+        rows=rows, cols=cols, n_cycles=T, W=W, I=I,
+        stats={k: int(v) for k, v in dict(meta["stats"]).items()}, **kw)
+    if meta.get("fused"):
+        cp.schedule = schedule_from_state(arrays)
+        if cp.schedule.n_cycles != cp.n_cycles:
+            raise ValueError(
+                f"schedule n_cycles {cp.schedule.n_cycles} != {cp.n_cycles}")
+    return cp
+
+
 def compile_program(
     program: Sequence[Sequence[object]],
     rows: int,

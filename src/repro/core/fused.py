@@ -56,6 +56,23 @@ def schedule_for(cp: CompiledProgram) -> FusedSchedule:
     return cp.schedule
 
 
+def prewarm_replay(cp: CompiledProgram) -> None:
+    """Build ``cp``'s numpy replay plan ahead of the first batch.
+
+    The first execute through a plan pays for deriving the replay structure
+    (span grouping, gather tables) on top of the actual array work; the
+    async compile pool calls this from a worker thread so that cost lands in
+    the compile/warm-up account instead of the first request's latency.
+    Memoized on ``cp._caches`` like every executor artifact — calling it is
+    always correct and at worst a no-op.
+    """
+    if cp.schedule is not None:
+        _numpy_fused_plan(cp)
+    else:
+        from .engine import _numpy_plan
+        _numpy_plan(cp)
+
+
 # ---------------------------------------------------------------------------
 # NumPy fused executor
 # ---------------------------------------------------------------------------

@@ -88,6 +88,27 @@ class CrossbarPlan:
             return cp
         return self._compiled
 
+    def adopt_compiled(self, cp: CompiledProgram) -> CompiledProgram:
+        """Install a deserialized trace as this plan's :meth:`compile` result.
+
+        The restore half of ``core.compile.compiled_state`` — a plan-store
+        hit calls this instead of recompiling. Geometry must match the plan
+        (a mismatched trace raises ``ValueError`` and the caller recompiles);
+        the pallas layout manifest is derived state, reattached here rather
+        than serialized. Requires ``self.program`` to be built already so
+        the usual rebind-invalidation rule (conv kernels) keeps working.
+        """
+        prog = self.program
+        assert prog is not None, "plan has no program built yet"
+        if (cp.rows, cp.cols) != (self.rows, self.cols):
+            raise ValueError(
+                f"compiled trace geometry {(cp.rows, cp.cols)} != plan "
+                f"geometry {(self.rows, self.cols)}")
+        cp.pallas_spec = self.pallas_spec()
+        self._compiled = cp
+        self._compiled_src = prog
+        return cp
+
     def pallas_spec(self):
         """Layout manifest for the pallas executor backend, or ``None``.
 

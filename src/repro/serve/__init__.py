@@ -11,8 +11,10 @@ Two services live here:
   through it) stays light: the model stack and jax load only when
   ``Engine``/``Request`` are actually touched.
 """
+from .compile_pool import CompileJob, CompilePool
 from .matpim import (CacheStats, PlanService, ServeRequest, Ticket,
                      bucket_up, get_default_service, reset_default_service)
+from .plan_store import PlanStore, get_default_store, reset_default_store
 
 _LLM_ENGINE = ("Engine", "Request")
 
@@ -27,6 +29,7 @@ def __getattr__(name):
 # Engine/Request resolve via __getattr__ but stay OUT of __all__: a
 # `from repro.serve import *` must not eagerly drag in the jax model stack
 __all__ = [
-    "CacheStats", "PlanService", "ServeRequest", "Ticket", "bucket_up",
-    "get_default_service", "reset_default_service",
+    "CacheStats", "CompileJob", "CompilePool", "PlanService", "PlanStore",
+    "ServeRequest", "Ticket", "bucket_up", "get_default_service",
+    "get_default_store", "reset_default_service", "reset_default_store",
 ]

@@ -45,6 +45,7 @@ bit-identical to sequential per-request execution, in any order.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import OrderedDict
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
@@ -52,11 +53,14 @@ from typing import Callable, Dict, Iterable, List, Optional, Tuple
 import numpy as np
 
 from ..core.compile import RunnerCache
+from ..core.fused import prewarm_replay
 from ..core.tiling import (TiledBinaryMatvec, TiledConv2d, TiledMatvec,
                            majority_sign)
 from ..device.faults import FaultModel, FaultRealization
 from ..obs import metrics as _metrics
 from ..obs.trace import span as _span
+from .compile_pool import CompilePool
+from .plan_store import PlanStore, get_default_store
 
 
 def bucket_up(v: int, floor: int = 8) -> int:
@@ -70,7 +74,17 @@ def bucket_up(v: int, floor: int = 8) -> int:
 
 @dataclasses.dataclass
 class CacheStats:
-    """Plan-cache and batching counters for one :class:`PlanService`."""
+    """Plan-cache and batching counters for one :class:`PlanService`.
+
+    The reconciliation identities the accounting tests pin down:
+    ``hits + misses == requests`` (every submit resolves a plan exactly
+    once), and ``compile_s + warmup_s`` is the total cold-plan cost —
+    under the async admit path compile wall accrues when the job *lands*
+    rather than inside the submit call, but the identity is unchanged.
+    ``async_compiles`` counts misses whose compile ran on the worker pool;
+    ``store_hits`` counts misses satisfied by deserializing the persistent
+    plan store instead of ``compile_program`` (store_hits <= misses).
+    """
 
     hits: int = 0
     misses: int = 0
@@ -83,6 +97,8 @@ class CacheStats:
     # (jax jit etc.) that would otherwise be mis-attributed to steady-state
     # execute. compile_s + warmup_s is the true cost of a cold plan.
     warmup_s: float = 0.0
+    async_compiles: int = 0   # misses compiled off-path by the worker pool
+    store_hits: int = 0       # misses served from the persistent plan store
 
     @property
     def hit_rate(self) -> float:
@@ -170,7 +186,9 @@ class PlanService:
                  parts: int = 32, bucket: bool = True, bucket_floor: int = 8,
                  max_batch: Optional[int] = None, seed: Optional[int] = 0,
                  max_starve_steps: int = 4, tunings=None,
-                 autotune: Optional[bool] = None):
+                 autotune: Optional[bool] = None,
+                 async_compile: bool = False, compile_workers: int = 2,
+                 compile_queue: int = 8, store=None):
         self.max_plans = int(max_plans)
         self.fuse = bool(fuse)
         self.backend = backend
@@ -205,6 +223,38 @@ class PlanService:
         self._uid = 0
         self._step = 0
         self._rng = np.random.default_rng(seed)  # FaultModel sampling stream
+        # ``store``: None -> $MATPIM_PLAN_STORE default (or no store),
+        # False -> explicitly store-less, a PlanStore instance is used as
+        # given, anything else is a path.
+        if store is None:
+            self.store: Optional[PlanStore] = get_default_store()
+        elif store is False:
+            self.store = None
+        elif isinstance(store, PlanStore):
+            self.store = store
+        else:
+            self.store = PlanStore(store)
+        # async admit path: misses enqueue compile jobs on a bounded worker
+        # pool while the stream loop keeps draining warm buckets; the pool
+        # is lazy (first async miss) so sync services never spawn threads
+        self.async_compile = bool(async_compile)
+        self._compile_workers = int(compile_workers)
+        self._compile_queue = int(compile_queue)
+        self._pool: Optional[CompilePool] = None
+        # plan key -> (CompileJob, wrapper) for in-flight async compiles;
+        # buckets whose key is here are parked until the job lands
+        self._compiling: Dict[tuple, tuple] = {}
+        # coarse re-entrant lock over cache/queue/stats state: submit_* and
+        # the execute loops are safe to call from multiple threads. Workers
+        # never take it (job closures touch only wrapper + store), so
+        # holding it while waiting on a job cannot deadlock.
+        self._lock = threading.RLock()
+
+    def close(self) -> None:
+        """Shut down the compile pool; in-flight jobs finish first."""
+        if self._pool is not None:
+            self._pool.shutdown()
+            self._pool = None
 
     # -- plan cache ----------------------------------------------------------
 
@@ -214,23 +264,143 @@ class PlanService:
         _metrics.counter("serve.cache.evictions").inc()
 
     def _get_plan(self, key: tuple, factory: Callable):
-        w = self._plans.get(key)       # LRU touch on hit
-        if w is not None:
-            self.stats.hits += 1
-            _metrics.counter("serve.cache.hits").inc()
+        with self._lock:
+            w = self._plans.get(key)       # LRU touch on hit
+            if w is not None:
+                self.stats.hits += 1
+                _metrics.counter("serve.cache.hits").inc()
+                return w
+            self.stats.misses += 1
+            _metrics.counter("serve.cache.misses").inc()
+            t0 = time.perf_counter()
+            with _span("serve.plan_build", key=repr(key)):
+                w = factory()
+                # compile here (store load else lowering) unless the async
+                # path accepted the job — then the cost accrues at land time
+                if w.plan.program is not None \
+                        and not self._compile_async(key, w):
+                    self._compile_sync(key, w)
+            dt = time.perf_counter() - t0
+            self.stats.compile_s += dt
+            _metrics.counter("serve.compile_s").inc(dt)
+            self._plans[key] = w           # may evict -> _on_plan_evict
             return w
-        self.stats.misses += 1
-        _metrics.counter("serve.cache.misses").inc()
-        t0 = time.perf_counter()
-        with _span("serve.plan_build", key=repr(key)):
-            w = factory()
-            if w.plan.program is not None:
-                w.plan.compile(fuse=self.fuse)  # pay lowering at miss time
-        dt = time.perf_counter() - t0
-        self.stats.compile_s += dt
-        _metrics.counter("serve.compile_s").inc(dt)
-        self._plans[key] = w           # may evict -> _on_plan_evict
-        return w
+
+    # -- persistent store + async compilation --------------------------------
+
+    def _load_from_store(self, key: tuple, plan) -> bool:
+        """Adopt a deserialized trace for ``key`` if the store has one."""
+        if self.store is None:
+            return False
+        cp = self.store.load(key)
+        if cp is None:
+            return False
+        try:
+            plan.adopt_compiled(cp)
+        except Exception:
+            return False        # geometry drift etc. -> recompile below
+        return True
+
+    def _compile_sync(self, key: tuple, w) -> None:
+        """Miss path on the caller's thread: store load, else lower+put."""
+        if self._load_from_store(key, w.plan):
+            self.stats.store_hits += 1
+            return
+        cp = w.plan.compile(fuse=self.fuse)
+        if self.store is not None and not self.store.entry_path(key).exists():
+            self.store.put(key, cp)
+
+    def _compile_async(self, key: tuple, w) -> bool:
+        """Try to move the miss's compile onto the worker pool.
+
+        Falls back to sync (returns False) when async is off, when there is
+        nothing pending to overlap with (an idle service gains nothing from
+        the handoff — single-request latency must not regress), or when the
+        bounded queue is full (backpressure degrades to inline compiles).
+        """
+        if not self.async_compile \
+                or not (self._queue or self._compiling):
+            return False
+        if self._pool is None:
+            self._pool = CompilePool(workers=self._compile_workers,
+                                     max_queue=self._compile_queue)
+        store, fuse, backend, plan = self.store, self.fuse, self.backend, \
+            w.plan
+
+        def job():
+            info = {"store_hit": False, "warm_s": 0.0, "prewarmed": False}
+            if store is not None:
+                cp = store.load(key)
+                if cp is not None:
+                    try:
+                        plan.adopt_compiled(cp)
+                        info["store_hit"] = True
+                    except Exception:
+                        cp = None
+            if not info["store_hit"]:
+                cp = plan.compile(fuse=fuse)
+                if store is not None \
+                        and not store.entry_path(key).exists():
+                    store.put(key, cp)
+            if backend in ("numpy", "auto", "numpy-fused", "numpy-unfused"):
+                # build the numpy replay plan off-path too, so the plan's
+                # first real batch runs at steady-state speed
+                t0 = time.perf_counter()
+                prewarm_replay(cp)
+                info["warm_s"] = time.perf_counter() - t0
+                info["prewarmed"] = True
+            return info
+
+        job_h = self._pool.submit(key, job, block=False)
+        if job_h is None:
+            return False            # queue full -> compile inline
+        self._compiling[key] = (job_h, w)
+        self.stats.async_compiles += 1
+        _metrics.counter("serve.async_compiles").inc()
+        return True
+
+    def _collect_landed(self, wait: bool = False,
+                        timeout: Optional[float] = None) -> int:
+        """Integrate finished compile jobs; their buckets become ready.
+
+        ``wait=True`` blocks (outside the service lock) until at least one
+        in-flight job signals, bounding the stream loop's idle spin when
+        every pending bucket is parked behind a compile.
+        """
+        with self._lock:
+            jobs = sorted(self._compiling.items(),
+                          key=lambda kv: kv[1][0].submitted_s)
+        if not jobs:
+            return 0
+        if wait and not any(j.done.is_set() for _, (j, _) in jobs):
+            jobs[0][1][0].wait(timeout)
+        landed = 0
+        for key, (job, w) in jobs:
+            if not job.done.is_set():
+                continue
+            with self._lock:
+                if self._compiling.pop(key, None) is None:
+                    continue        # another thread integrated it
+                if job.error is not None:
+                    # the bucket un-parks; execute_batch will compile
+                    # synchronously as a self-healing fallback
+                    raise job.error
+                info = job.result or {}
+                dt = job.wall_s - info.get("warm_s", 0.0)
+                self.stats.compile_s += dt
+                _metrics.counter("serve.compile_s").inc(dt)
+                if info.get("store_hit"):
+                    self.stats.store_hits += 1
+                if info.get("prewarmed"):
+                    # replay-plan build already paid on the worker: account
+                    # it as warm-up and let the first batch count as steady
+                    w._served_once = True
+                    self.stats.warmup_s += info["warm_s"]
+                    _metrics.counter("serve.warmup_s").inc(info["warm_s"])
+            _metrics.histogram("serve.compile_wait_us").observe(
+                (job.finished_s - job.submitted_s) * 1e6)
+            landed += 1
+        return landed
 
     def tiled(self, kind: str, *args, key_extra=None, **kw):
         """Cached tiled-wrapper fetch (exact shapes, no bucketing).
@@ -266,10 +436,12 @@ class PlanService:
                 bucket_up(k, self.bucket_floor))
 
     def _ticket(self, kind: str, key: tuple, n_units: int) -> Ticket:
-        self._uid += 1
-        self.stats.requests += 1
+        with self._lock:
+            self._uid += 1
+            self.stats.requests += 1
+            uid = self._uid
         _metrics.counter("serve.requests").inc()
-        return Ticket(uid=self._uid, kind=kind, key=key, n_units=n_units,
+        return Ticket(uid=uid, kind=kind, key=key, n_units=n_units,
                       submitted_s=time.perf_counter())
 
     def _enqueue(self, ticket, wrapper, load, decode, finalize, faults):
@@ -279,9 +451,11 @@ class PlanService:
                 f"FaultRealization batch {faults.batch} != the request's "
                 f"{ticket.n_units} crossbar units; sample it per request "
                 f"(n_cycles/W/I of wrapper.plan.compile())")
-        self._queue.append(_Pending(
-            ticket=ticket, wrapper=wrapper, load=load, decode=decode,
-            finalize=finalize, faults=faults, submitted_step=self._step))
+        with self._lock:
+            self._queue.append(_Pending(
+                ticket=ticket, wrapper=wrapper, load=load, decode=decode,
+                finalize=finalize, faults=faults,
+                submitted_step=self._step))
         return ticket
 
     def submit(self, kind: str, *args, **kw) -> Ticket:
@@ -412,6 +586,16 @@ class PlanService:
     def pending_units(self) -> int:
         return sum(p.ticket.n_units for p in self._queue)
 
+    @property
+    def ready_units(self) -> int:
+        """Pending units whose plan is compiled (not parked behind an
+        in-flight async compile) — what the admission budget counts."""
+        comp = self._compiling
+        if not comp:
+            return self.pending_units
+        return sum(p.ticket.n_units for p in self._queue
+                   if p.ticket.key not in comp)
+
     @staticmethod
     def _exec_key(p: _Pending) -> tuple:
         # requests coalesce only when they share the plan AND a compatible
@@ -426,9 +610,15 @@ class PlanService:
             f = ("model", p.faults)
         return (p.ticket.key, f)
 
-    def _buckets(self) -> "OrderedDict[tuple, List[_Pending]]":
+    def _buckets(self, ready_only: bool = True) \
+            -> "OrderedDict[tuple, List[_Pending]]":
+        """Pending requests grouped by exec key; ``ready_only`` skips
+        buckets parked behind an in-flight async compile."""
+        comp = self._compiling
         out: "OrderedDict[tuple, List[_Pending]]" = OrderedDict()
         for p in self._queue:
+            if ready_only and comp and p.ticket.key in comp:
+                continue
             out.setdefault(self._exec_key(p), []).append(p)
         return out
 
@@ -529,52 +719,84 @@ class PlanService:
         return done
 
     def flush(self) -> List[Ticket]:
-        """Run every pending request, one coalesced batch per bucket."""
+        """Run every pending request, one coalesced batch per bucket.
+
+        Buckets parked behind an in-flight async compile are skipped until
+        their plan lands; when nothing is ready the loop blocks on the
+        earliest compile job instead of spinning.
+        """
         done = []
         with _span("serve.flush", pending_units=self.pending_units):
             while self._queue:
-                self._step += 1
-                buckets = self._buckets()
-                done.extend(self._run_bucket(next(iter(buckets.values()))))
+                self._collect_landed()
+                with self._lock:
+                    buckets = self._buckets()
+                    if not buckets and not self._compiling:
+                        # defensive: a failed job already un-parked its
+                        # bucket; execute compiles synchronously if needed
+                        buckets = self._buckets(ready_only=False)
+                    if buckets:
+                        self._step += 1
+                        done.extend(self._run_bucket(
+                            next(iter(buckets.values()))))
+                        continue
+                self._collect_landed(wait=True, timeout=1.0)
         _metrics.gauge("serve.queue_depth_units").set(0)
         return done
 
     def step(self, max_units: Optional[int] = None) -> List[Ticket]:
-        """One serve-loop step: execute the fullest bucket (up to
+        """One serve-loop step: execute the fullest *ready* bucket (up to
         ``max_units`` crossbar images), leave the rest queued.
 
         Anti-starvation aging: fullest-first alone lets a sustained popular
         stream starve minority buckets forever, so a bucket whose oldest
         request has waited ``max_starve_steps`` steps is served first
         (oldest such bucket wins), bounding every request's queue delay.
+        When every pending bucket is parked behind an async compile, the
+        step blocks until one lands rather than returning empty-handed.
         """
         if not self._queue:
             return []
         _metrics.gauge("serve.queue_depth_units").set(self.pending_units)
-        self._step += 1
-        buckets = self._buckets().values()
+        self._collect_landed()
+        with self._lock:
+            buckets = list(self._buckets().values())
+        if not buckets:
+            if self._compiling:
+                self._collect_landed(wait=True, timeout=1.0)
+            with self._lock:
+                buckets = list(self._buckets().values())
+                if not buckets and not self._compiling:
+                    buckets = list(
+                        self._buckets(ready_only=False).values())
+            if not buckets:
+                return []
+        with self._lock:
+            self._step += 1
 
-        def age(ps):
-            return self._step - min(p.submitted_step for p in ps)
+            def age(ps):
+                return self._step - min(p.submitted_step for p in ps)
 
-        starved = [ps for ps in buckets if age(ps) > self.max_starve_steps]
-        if starved:
-            pends = max(starved, key=age)
-        else:
-            pends = max(buckets,
-                        key=lambda ps: sum(p.ticket.n_units for p in ps))
-        if max_units is not None:
-            take, acc = [], 0
-            for p in pends:
-                if take and acc + p.ticket.n_units > max_units:
-                    break
-                take.append(p)
-                acc += p.ticket.n_units
-            pends = take
-        with _span("serve.step", step=self._step,
-                   pending_units=self.pending_units,
-                   starved=bool(starved)):
-            done = self._run_bucket(pends)
+            starved = [ps for ps in buckets
+                       if age(ps) > self.max_starve_steps]
+            if starved:
+                pends = max(starved, key=age)
+            else:
+                pends = max(buckets,
+                            key=lambda ps: sum(p.ticket.n_units
+                                               for p in ps))
+            if max_units is not None:
+                take, acc = [], 0
+                for p in pends:
+                    if take and acc + p.ticket.n_units > max_units:
+                        break
+                    take.append(p)
+                    acc += p.ticket.n_units
+                pends = take
+            with _span("serve.step", step=self._step,
+                       pending_units=self.pending_units,
+                       starved=bool(starved)):
+                done = self._run_bucket(pends)
         _metrics.counter("serve.steps").inc()
         _metrics.gauge("serve.queue_depth_units").set(self.pending_units)
         return done
@@ -590,6 +812,12 @@ class PlanService:
         wall latency (``wall_s``: submit → decode done), the wall and size
         of the engine batch that served it (``batch_wall_s`` /
         ``batch_units``), and how many steps it queued.
+
+        With the async admit path on, a miss parks its bucket behind a
+        background compile job while the loop keeps admitting and draining
+        warm buckets — the admission budget counts only *ready* units, so
+        compiling buckets don't block warm traffic, with total in-flight
+        work still bounded at ``2 * slots`` units.
         """
         if slots < 1:
             raise ValueError(f"slots={slots}: need at least one in-flight "
@@ -599,8 +827,10 @@ class PlanService:
         tickets: List[Ticket] = []
         with _span("serve.stream", slots=slots) as sp:
             while True:
+                self._collect_landed()
                 with _span("serve.admit", slots=slots):
-                    while not exhausted and self.pending_units < slots:
+                    while (not exhausted and self.ready_units < slots
+                           and self.pending_units < 2 * slots):
                         try:
                             r = next(it)
                         except StopIteration:

@@ -27,7 +27,7 @@ def _best_of(fn, n):
 
 
 @pytest.mark.skipif(not have_jax(), reason="jax not installed")
-def test_fused_jax_beats_interpreter_at_batch1():
+def test_fused_jax_beats_interpreter_at_batch1(single_retry):
     rng = np.random.default_rng(0)
     plan = BinaryMatvecPlan(48, 64, rows=64, cols=256, parts=8)
     A = rng.choice([-1, 1], size=(48, 64))
@@ -38,11 +38,15 @@ def test_fused_jax_beats_interpreter_at_batch1():
     np.testing.assert_array_equal(y_jax, y_int)          # speed, not drift
     np.testing.assert_array_equal(pop_jax, pop_int)
 
-    t_jax = _best_of(lambda: plan.run(A, x, backend="jax"), 7)
-    t_int = _best_of(lambda: plan.run(A, x, backend="interp"), 5)
-    assert t_jax <= t_int, (
-        f"fused jax ({t_jax * 1e3:.1f} ms) slower than the interpreter "
-        f"({t_int * 1e3:.1f} ms) at batch=1 — scan-per-cycle regression?")
+    def timing_check():
+        t_jax = _best_of(lambda: plan.run(A, x, backend="jax"), 7)
+        t_int = _best_of(lambda: plan.run(A, x, backend="interp"), 5)
+        assert t_jax <= t_int, (
+            f"fused jax ({t_jax * 1e3:.1f} ms) slower than the interpreter "
+            f"({t_int * 1e3:.1f} ms) at batch=1 — scan-per-cycle "
+            f"regression?")
+
+    single_retry(timing_check)   # wall-clock only: one bounded re-measure
 
 
 def test_fusion_does_not_change_cycle_accounting():

@@ -310,7 +310,7 @@ def _per_call_us(fn, n):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def test_tracing_disabled_overhead_under_2pct():
+def test_tracing_disabled_overhead_under_2pct(single_retry):
     """The instrumentation ``engine.execute`` gained must cost <2% of a
     representative execute wall while tracing is disabled.
 
@@ -338,14 +338,18 @@ def test_tracing_disabled_overhead_under_2pct():
             pass
 
     added_ops()                           # warm metric creation
-    over_us = min(_per_call_us(added_ops, 2000) for _ in range(5))
-
     execute(cp, mem, backend="numpy")     # warm
-    wall_us = min(_per_call_us(lambda: execute(cp, mem, backend="numpy"), 5)
-                  for _ in range(5))
-    assert over_us < 0.02 * wall_us, (
-        f"disabled-path instrumentation {over_us:.2f}us vs execute "
-        f"{wall_us:.1f}us = {100 * over_us / wall_us:.2f}%")
+
+    def timing_check():
+        over_us = min(_per_call_us(added_ops, 2000) for _ in range(5))
+        wall_us = min(
+            _per_call_us(lambda: execute(cp, mem, backend="numpy"), 5)
+            for _ in range(5))
+        assert over_us < 0.02 * wall_us, (
+            f"disabled-path instrumentation {over_us:.2f}us vs execute "
+            f"{wall_us:.1f}us = {100 * over_us / wall_us:.2f}%")
+
+    single_retry(timing_check)   # wall-clock only: one bounded re-measure
 
 
 # ---------------------------------------------------------------------------
@@ -364,6 +368,9 @@ def test_slo_sweep_rows_pass_schema_validation(tmp_path):
     modes = [r["mode"] for r in payload["rows"]]
     assert modes.count("closed") == 1 and modes.count("open") >= 2
     assert payload["capacity_rps"] > 0
+    wr = payload["warm_restart"]          # store replay ran compile-free
+    assert wr["compile_programs"] == 0
+    assert wr["store_hits"] == wr["misses"] > 0
     for r in payload["rows"]:
         assert r["requests"] == 6
         assert 0 <= r["hit_rate"] <= 1
@@ -375,13 +382,22 @@ def test_slo_sweep_rows_pass_schema_validation(tmp_path):
 
 def test_slo_schema_validator_catches_breakage():
     from benchmarks.report import validate_slo
-    ok = {"schema": 1, "bench": "slo", "rows": [
-        {"mode": m, "load_factor": lf, "offered_rps": off,
-         "achieved_rps": 1.0, "requests": 1, "p50_ms": 1.0, "p95_ms": 2.0,
-         "p99_ms": 3.0, "mean_queue_units": 1.0, "max_queue_units": 1,
-         "hit_rate": 0.5, "batches": 1}
-        for m, lf, off in [("closed", None, None), ("open", 0.5, 10.0),
-                           ("open", 1.5, 30.0)]]}
+    ok = {"schema": 1, "bench": "slo",
+          "cold_start": {"warm_wall_s": 1.0, "compile_s": 0.5,
+                         "warmup_s": 0.2, "store_hits": 0},
+          "warm_restart": {"requests": 3, "replay_wall_s": 0.5,
+                           "first_batch_ms": 2.0, "steady_p95_ms": 2.0,
+                           "compile_s": 0.01, "warmup_s": 0.0,
+                           "store_hits": 2, "misses": 2,
+                           "compile_programs": 0, "p50_ms": 1.0,
+                           "p95_ms": 2.0, "p99_ms": 3.0},
+          "rows": [
+              {"mode": m, "load_factor": lf, "offered_rps": off,
+               "achieved_rps": 1.0, "requests": 1, "p50_ms": 1.0,
+               "p95_ms": 2.0, "p99_ms": 3.0, "mean_queue_units": 1.0,
+               "max_queue_units": 1, "hit_rate": 0.5, "batches": 1}
+              for m, lf, off in [("closed", None, None), ("open", 0.5, 10.0),
+                                 ("open", 1.5, 30.0)]]}
     assert validate_slo(ok) == []
     bad = json.loads(json.dumps(ok))
     bad["rows"][1]["p95_ms"] = 0.1        # below p50
@@ -389,6 +405,15 @@ def test_slo_schema_validator_catches_breakage():
     bad = json.loads(json.dumps(ok))
     del bad["rows"][0]["hit_rate"]
     assert any("missing keys" in e for e in validate_slo(bad))
+    bad = json.loads(json.dumps(ok))
+    del bad["warm_restart"]               # restart proof is not optional
+    assert any("warm_restart" in e for e in validate_slo(bad))
+    bad = json.loads(json.dumps(ok))
+    bad["warm_restart"]["compile_programs"] = 3
+    assert any("compile-free" in e for e in validate_slo(bad))
+    bad = json.loads(json.dumps(ok))
+    del bad["cold_start"]["compile_s"]
+    assert any("cold_start" in e for e in validate_slo(bad))
     assert validate_slo({"schema": 2, "bench": "slo", "rows": []})
 
 

@@ -471,3 +471,63 @@ def test_pipeline_stages_share_default_service():
 
 def test_bucket_up():
     assert [bucket_up(v) for v in (1, 8, 9, 17, 100)] == [8, 8, 16, 32, 128]
+
+
+# -- stats schema + reconciliation (async vs sync accounting) ---------------
+
+
+def test_cache_stats_field_whitelist():
+    """Every stat field is load-bearing for a reconciliation identity
+    somewhere (tests, benchmarks/slo.py cold_start, report.py tables).
+    Adding a field here without auditing those consumers silently skews
+    the served-cost accounting — so additions must update this whitelist
+    deliberately."""
+    import dataclasses as dc
+
+    from repro.serve.matpim import CacheStats
+
+    expected = {"hits", "misses", "evictions", "requests", "batches",
+                "units", "compile_s", "warmup_s", "async_compiles",
+                "store_hits"}
+    fields = {f.name for f in dc.fields(CacheStats)}
+    assert fields == expected, (
+        f"CacheStats schema drifted: added={sorted(fields - expected)} "
+        f"removed={sorted(expected - fields)} — audit every stats "
+        f"consumer, then update this whitelist")
+    assert set(CacheStats().as_dict()) == expected | {"hit_rate"}
+
+
+@pytest.mark.parametrize("async_compile", [False, True])
+def test_stats_reconciliation_identities(async_compile):
+    """hits + misses == requests, and a warm replay adds exactly zero to
+    the cold-cost account (compile_s + warmup_s) — on BOTH admit paths."""
+    rng = np.random.default_rng(11)
+    reqs = _mixed_requests(rng, 12)
+    svc = PlanService(**GEOM, async_compile=async_compile)
+    try:
+        tickets = [svc.submit(k, *args) for k, args in reqs]
+        svc.flush()
+        s = svc.stats
+        assert s.hits + s.misses == s.requests == len(reqs)
+        assert s.units == sum(t.n_units for t in tickets)
+        assert s.batches > 0
+        assert s.compile_s > 0.0 and s.warmup_s >= 0.0
+        assert s.store_hits == 0                 # no store configured
+        if async_compile:
+            assert 0 <= s.async_compiles <= s.misses
+        else:
+            assert s.async_compiles == 0
+
+        cold_compile_s, cold_warmup_s = s.compile_s, s.warmup_s
+        cold_misses = s.misses
+        replay = [svc.submit(k, *args) for k, args in reqs]
+        svc.flush()
+        assert all(t.done for t in replay)
+        s = svc.stats
+        assert s.hits + s.misses == s.requests == 2 * len(reqs)
+        assert s.misses == cold_misses           # replay is all hits
+        # the identity: cold cost is attributed once, never re-accrued
+        assert s.compile_s == cold_compile_s
+        assert s.warmup_s == cold_warmup_s
+    finally:
+        svc.close()
