@@ -274,6 +274,83 @@ def auto_vs_fixed_table() -> list:
     return warnings
 
 
+SCALING_MIN_X = 3.0
+
+
+def _derived(m: dict) -> dict:
+    return dict(kv.split("=", 1) for kv in m["derived"].split(";")
+                if "=" in kv)
+
+
+def sharded_scaling_table() -> None:
+    """Hard gate on the sharded-execution records.
+
+    ``BENCH_engine.json`` must carry the single-device jax comparator row
+    plus mesh rows for the tiled binary matvec, every mesh row must be
+    bit-identical (``correct=True``), and the 8-device modeled lockstep
+    throughput must be >= ``SCALING_MIN_X`` times the single-device rate.
+    ``BENCH_serve.json`` must carry the parallel-bucket dispatch row.
+    Missing rows exit nonzero — a bench run without
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` silently drops
+    them, and that must fail loudly, not vanish from the report.
+    """
+    payload = json.load(open(ROOT / "BENCH_engine.json"))
+    quick = bool(payload.get("quick"))
+    eng = {m["name"]: m for m in payload["metrics"]}
+    jax1 = [n for n in eng
+            if n.startswith("engine/tiled_binary_mv_execute_")
+            and n.endswith("_jax1")]
+    mesh = sorted(n for n in eng
+                  if n.startswith("engine/tiled_binary_mv_execute_")
+                  and "_mesh" in n)
+    if not jax1:
+        sys.exit("benchmarks/report.py: BENCH_engine.json is missing the "
+                 "single-device engine/tiled_binary_mv_execute_*_jax1 "
+                 "comparator row (jax unavailable during the bench run?)")
+    if not any(n.endswith("_mesh8") for n in mesh):
+        sys.exit("benchmarks/report.py: BENCH_engine.json has no "
+                 "engine/tiled_binary_mv_execute_*_mesh8 row — regenerate "
+                 "with XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                 "so the sharded-execution rows are measured")
+    base = _derived(eng[jax1[0]])
+    single_tps = float(base["tiles_per_s"])
+    print("\n### Sharded tile execution (modeled lockstep devices)\n")
+    print("| row | devices | wall us | tiles/s (serialized) | "
+          "tiles/s (modeled parallel) | scaling vs 1 dev | bit-identical |")
+    print("|---|---|---|---|---|---|---|")
+    print(f"| {jax1[0]} | 1 | {eng[jax1[0]]['value']:g} | {single_tps:g} | "
+          f"{single_tps:g} | 1.00x | (oracle) |")
+    for n in mesh:
+        d = _derived(eng[n])
+        if d.get("correct") != "True":
+            sys.exit(f"benchmarks/report.py: {n} is not bit-identical to "
+                     f"the single-device run (correct={d.get('correct')!r})")
+        par = float(d["device_par_tiles_per_s"])
+        print(f"| {n} | {d['devices']} | {eng[n]['value']:g} | "
+              f"{float(d['tiles_per_s']):g} | {par:g} | "
+              f"{par / single_tps:.2f}x | {d['correct']} |")
+        if (n.endswith("_mesh8") and not quick
+                and par < SCALING_MIN_X * single_tps):
+            # quick geometry is 32 tiles = one packed word, where a mesh
+            # cannot model a win; the gate applies to the full-size record
+            sys.exit(
+                f"benchmarks/report.py: {n} modeled 8-device throughput "
+                f"{par:g} tiles/s is under {SCALING_MIN_X:g}x the "
+                f"single-device {single_tps:g} tiles/s — sharded execution "
+                f"is not paying for itself")
+    srv = {m["name"]
+           for m in json.load(open(ROOT / "BENCH_serve.json"))["metrics"]}
+    if "serve/parallel_buckets" not in srv:
+        sys.exit("benchmarks/report.py: BENCH_serve.json is missing the "
+                 "serve/parallel_buckets multi-device dispatch row")
+    d = _derived(next(m for m in
+                      json.load(open(ROOT / "BENCH_serve.json"))["metrics"]
+                      if m["name"] == "serve/parallel_buckets"))
+    print(f"\nserve bucket dispatch: devices={d.get('devices')} "
+          f"(used {d.get('devices_used')}), wall ratio vs serial "
+          f"{d.get('wall_ratio')} ({d.get('note')})")
+
+
 SLO_ROW_KEYS = ("mode", "load_factor", "offered_rps", "achieved_rps",
                 "requests", "p50_ms", "p95_ms", "p99_ms",
                 "mean_queue_units", "max_queue_units", "hit_rate", "batches")
@@ -437,6 +514,7 @@ def main():
     bench_table()
     bench_delta_table()
     auto_vs_fixed_table()
+    sharded_scaling_table()
     slo_table()
     print("\n## §Dry-run\n")
     dryrun_table(cells)

@@ -14,8 +14,12 @@ reused:
 * :func:`batch_bucket` — power-of-two batch buckets; one tuning entry
   covers a bucket, mirroring the serving layer's shape buckets.
 * :class:`TuningTable` — a small on-disk JSON table mapping
-  ``(program key, batch bucket) -> (backend, max_batch, us)``.  Corrupt or
-  schema-stale files never fail an execute: they load as empty and the
+  ``(program key, batch bucket, device topology) -> (backend, max_batch,
+  us)``.  The topology axis (the ``tiles``-mesh device count, 1 when
+  unsharded) keeps 1-device measurements from deciding 8-device sharded
+  executes; schema-1 tables (no topology) load as topo-1 *heuristic*
+  entries — usable hints, never authoritative measurements.  Corrupt or
+  unknown-schema files never fail an execute: they load as empty and the
   conservative :func:`heuristic` takes over.
 * :func:`resolve_auto` — what ``engine.execute(backend="auto")`` calls:
   measured entry if present and runnable, heuristic otherwise.
@@ -43,7 +47,7 @@ from typing import Dict, List, Optional, Tuple
 from ..obs import metrics as _metrics
 from ..obs.trace import span as _span
 
-SCHEMA = 1
+SCHEMA = 2  # v2 adds the device-topology key component ("key|bucket|topo")
 
 # env var naming the on-disk tunings table; unset -> in-process table only
 TUNINGS_ENV = "MATPIM_TUNINGS"
@@ -89,23 +93,29 @@ class TuningEntry:
 
 
 class TuningTable:
-    """On-disk ``(program key, batch bucket) -> TuningEntry`` map.
+    """On-disk ``(program key, batch bucket, topology) -> TuningEntry`` map.
 
-    ``path=None`` keeps the table in-process only. Loading is lazy and
-    forgiving: an unreadable / corrupt / schema-stale file records a
-    ``load_error`` and yields an empty table — ``backend="auto"`` then falls
-    back to the heuristic instead of failing the execute. ``save()`` writes
-    atomically (tmp + rename) and creates parent directories.
+    ``topo`` is the device count the execute sharded over (1 = single
+    device / no mesh), so measurements taken at one topology never resolve
+    the backend for another. ``path=None`` keeps the table in-process only.
+    Loading is lazy and forgiving: an unreadable / corrupt / unknown-schema
+    file records a ``load_error`` and yields an empty table —
+    ``backend="auto"`` then falls back to the heuristic instead of failing
+    the execute. Schema-1 files (pre-topology) load, but demoted to topo-1
+    ``source="heuristic"`` entries: their walls were measured before the
+    topology axis existed, so they may seed choices, not assert them.
+    ``save()`` writes atomically (tmp + rename) and creates parent
+    directories.
     """
 
     def __init__(self, path: Optional[os.PathLike] = None):
         self.path = Path(path) if path is not None else None
         self.load_error: Optional[str] = None
-        self._entries: Optional[Dict[Tuple[str, int], TuningEntry]] = None
+        self._entries: Optional[Dict[Tuple[str, int, int], TuningEntry]] = None
 
     # -- persistence ---------------------------------------------------------
 
-    def _load(self) -> Dict[Tuple[str, int], TuningEntry]:
+    def _load(self) -> Dict[Tuple[str, int, int], TuningEntry]:
         if self._entries is not None:
             return self._entries
         self._entries = {}
@@ -113,17 +123,22 @@ class TuningTable:
             return self._entries
         try:
             d = json.loads(self.path.read_text())
-            if d.get("schema") != SCHEMA:
-                raise ValueError(f"schema {d.get('schema')} != {SCHEMA}")
+            schema = d.get("schema")
+            if schema not in (1, SCHEMA):
+                raise ValueError(f"schema {schema} not in (1, {SCHEMA})")
             for k, e in d["entries"].items():
-                key, bucket = k.rsplit("|", 1)
+                if schema == 1:
+                    key, bucket = k.rsplit("|", 1)
+                    topo, source = 1, "heuristic"  # pre-topology: demote
+                else:
+                    key, bucket, topo = k.rsplit("|", 2)
+                    source = str(e.get("source", "measured"))
                 entry = TuningEntry(
                     backend=str(e["backend"]), us=float(e["us"]),
-                    max_batch=e.get("max_batch"),
-                    source=str(e.get("source", "measured")))
+                    max_batch=e.get("max_batch"), source=source)
                 if entry.max_batch is not None:
                     entry.max_batch = int(entry.max_batch)
-                self._entries[(key, int(bucket))] = entry
+                self._entries[(key, int(bucket), int(topo))] = entry
         except Exception as exc:  # corrupt/stale table is never fatal
             self.load_error = f"{type(exc).__name__}: {exc}"
             self._entries = {}
@@ -132,8 +147,8 @@ class TuningTable:
     def save(self) -> None:
         if self.path is None:
             return
-        entries = {f"{k}|{b}": e.as_dict()
-                   for (k, b), e in sorted(self._load().items())}
+        entries = {f"{k}|{b}|{t}": e.as_dict()
+                   for (k, b, t), e in sorted(self._load().items())}
         payload = {"schema": SCHEMA, "generated_by": "repro.core.autotune",
                    "entries": entries}
         self.path.parent.mkdir(parents=True, exist_ok=True)
@@ -150,28 +165,30 @@ class TuningTable:
 
     # -- queries -------------------------------------------------------------
 
-    def lookup(self, key: str, bucket: int) -> Optional[TuningEntry]:
-        return self._load().get((key, int(bucket)))
+    def lookup(self, key: str, bucket: int,
+               topo: int = 1) -> Optional[TuningEntry]:
+        return self._load().get((key, int(bucket), int(topo)))
 
     def record(self, key: str, bucket: int, backend: str, us: float,
                max_batch: Optional[int] = None,
-               source: str = "measured") -> TuningEntry:
+               source: str = "measured", topo: int = 1) -> TuningEntry:
         e = TuningEntry(backend=backend, us=float(us), max_batch=max_batch,
                         source=source)
-        self._load()[(key, int(bucket))] = e
+        self._load()[(key, int(bucket), int(topo))] = e
         return e
 
     def observe(self, key: str, bucket: int, backend: str, us: float,
-                max_batch: Optional[int] = None) -> None:
+                max_batch: Optional[int] = None, topo: int = 1) -> None:
         """Fold one measured wall time into the table: keep the fastest
-        variant seen per (key, bucket); refresh the time of the incumbent."""
-        cur = self.lookup(key, bucket)
+        variant seen per (key, bucket, topo); refresh the incumbent's time."""
+        cur = self.lookup(key, bucket, topo)
         same = (cur is not None and cur.backend == backend
                 and cur.max_batch == max_batch)
         if cur is None or same or cur.source == "heuristic" or us < cur.us:
-            self.record(key, bucket, backend, us, max_batch=max_batch)
+            self.record(key, bucket, backend, us, max_batch=max_batch,
+                        topo=topo)
 
-    def entries(self) -> Dict[Tuple[str, int], TuningEntry]:
+    def entries(self) -> Dict[Tuple[str, int, int], TuningEntry]:
         return dict(self._load())
 
     def __len__(self) -> int:
@@ -215,13 +232,21 @@ def _runnable(backend: str) -> bool:
     return base in ("numpy",) or (base == "jax" and have_jax())
 
 
-def heuristic(cp, B: int) -> Tuple[str, Optional[int]]:
+def heuristic(cp, B: int, topo: int = 1) -> Tuple[str, Optional[int]]:
     """Cold-path choice with nothing measured: jax-fused for narrow batches
     when the trace is fuse-friendly (the PR-4 regime: 8-40x vs interp),
     per-cycle numpy once the batch exceeds one jax word (the regime where
-    BENCH_engine shows fusion losing), fused numpy in between."""
+    BENCH_engine shows fusion losing), fused numpy in between.
+
+    ``topo > 1`` (a usable ``tiles`` mesh under the batch) prefers a jax
+    variant regardless of width — only jax executes sharded, so numpy would
+    silently serialize the topology it was asked to exploit."""
     from .engine import JAX_WORD_BITS, have_jax
     from .fused import jax_fuse_eligible
+    if topo > 1 and have_jax():
+        if cp.schedule is not None and jax_fuse_eligible(cp):
+            return "jax-fused", None
+        return "jax-unfused", None
     if B > JAX_WORD_BITS:
         return "numpy-unfused", None
     if have_jax() and cp.schedule is not None and jax_fuse_eligible(cp):
@@ -231,22 +256,29 @@ def heuristic(cp, B: int) -> Tuple[str, Optional[int]]:
 
 
 def resolve_auto(cp, B: int, faults=None,
-                 table: Optional[TuningTable] = None
+                 table: Optional[TuningTable] = None, topo: int = 1
                  ) -> Tuple[str, Optional[int], str]:
     """``backend="auto"`` resolution: ``(backend, max_batch, source)``.
 
     Fault runs skip the table entirely — the numpy paths accept every fault
     specification, and fault-injected walls should never train the table.
+    ``topo`` keys the lookup by device topology, so a 1-device measurement
+    never decides an 8-device sharded execute (and vice versa).
     """
     if faults is not None:
         _metrics.counter("autotune.resolve.faults").inc()
         return "numpy", None, "faults"
     table = table if table is not None else get_default_table()
-    e = table.lookup(program_key(cp), batch_bucket(B))
-    if e is not None and _runnable(e.backend):
+    e = table.lookup(program_key(cp), batch_bucket(B), topo=topo)
+    if e is not None and e.source == "measured" and _runnable(e.backend):
         _metrics.counter("autotune.resolve.measured").inc()
         return e.backend, e.max_batch, "measured"
-    be, mb = heuristic(cp, B)
+    if e is not None and _runnable(e.backend) and topo == 1:
+        # demoted schema-1 entry: a usable hint at the topology it was
+        # (implicitly) measured at, still reported as heuristic
+        _metrics.counter("autotune.resolve.heuristic").inc()
+        return e.backend, e.max_batch, "heuristic"
+    be, mb = heuristic(cp, B, topo=topo)
     _metrics.counter("autotune.resolve.heuristic").inc()
     return be, mb, "heuristic"
 

@@ -385,13 +385,15 @@ def _run_numpy_faulty(cp: CompiledProgram, mem: np.ndarray,
 JAX_WORD_BITS = 32
 
 
-def _build_jax_runner(cp: CompiledProgram):
-    import jax
+def _build_jax_body(cp: CompiledProgram, np_dtype=np.uint32):
+    """Un-jitted unfused per-cycle scan ``body(buf) -> buf`` over one packed
+    ``(C+1, R+1)`` word buffer (see :func:`jax_unfused_body`)."""
     import jax.numpy as jnp
     from jax import lax
 
     R1, C1, W = cp.rows + 1, cp.cols + 1, cp.W
-    dt = jnp.uint32
+    dt = jnp.dtype(np_dtype)
+    ones = dt.type(np.iinfo(np_dtype).max)
     row_masks = jnp.asarray(cp.row_masks)
     col_masks = jnp.asarray(cp.col_masks)
     xs = {
@@ -432,7 +434,7 @@ def _build_jax_runner(cp: CompiledProgram):
         for i in range(cp.I):
             region = col_masks[x["init_c"][i]][:, None] \
                 & row_masks[x["init_r"][i]][None, :]
-            word = jnp.where(x["init_v"][i] > 0, dt(0xFFFFFFFF), dt(0))
+            word = jnp.where(x["init_v"][i] > 0, ones, dt.type(0))
             buf = jnp.where(region, word, buf)
         return buf
 
@@ -440,11 +442,29 @@ def _build_jax_runner(cp: CompiledProgram):
         buf = lax.switch(x["mode"], (col_step, row_step, init_step), buf, x)
         return buf, None
 
-    @jax.jit
-    def run(buf0):
+    def body(buf0):
         # modest unroll amortizes the while-loop bookkeeping (~35% on CPU)
         buf, _ = lax.scan(step, buf0, xs, unroll=4)
         return buf
+
+    return body
+
+
+def jax_unfused_body(cp: CompiledProgram, np_dtype=np.uint32):
+    """Un-jitted unfused transition, memoized per (program, dtype) — the
+    seam ``repro.distributed.mesh_exec`` vmaps inside ``shard_map``."""
+    key = ("jax_unfused_body", np.dtype(np_dtype).name)
+    body = cp._caches.get(key)
+    if body is None:
+        body = cp._caches[key] = _build_jax_body(cp, np_dtype)
+    return body
+
+
+def _build_jax_runner(cp: CompiledProgram):
+    import jax
+    import jax.numpy as jnp
+
+    run = jax.jit(jax_unfused_body(cp, np.uint32))
 
     def runner(mem_np: np.ndarray) -> np.ndarray:
         B = mem_np.shape[0]
@@ -581,6 +601,18 @@ def _run_jax(cp: CompiledProgram, mem: np.ndarray,
 # ---------------------------------------------------------------------------
 
 
+def _ambient_mesh():
+    """The mesh activated by ``distributed.sharding.use_mesh``, if any.
+
+    Checked via ``sys.modules`` so numpy-only processes never pay a jax
+    import: an ambient mesh can only exist if something already imported
+    the sharding module to activate it.
+    """
+    import sys
+    mod = sys.modules.get("repro.distributed.sharding")
+    return mod.current_mesh() if mod is not None else None
+
+
 def execute(
     cp: CompiledProgram,
     mem: np.ndarray,
@@ -589,6 +621,7 @@ def execute(
     faults=None,
     rng=None,
     tunings=None,
+    mesh=None,
 ) -> EngineResult:
     """Replay ``cp`` over a batch of crossbars.
 
@@ -643,8 +676,11 @@ def execute(
     ``"pallas:fallback-<base>"``).
     """
     t0 = time.perf_counter()
+    if mesh is None:
+        mesh = _ambient_mesh()
     with _span("engine.execute", backend=backend) as sp:
-        res = _execute_impl(cp, mem, backend, max_batch, faults, rng, tunings)
+        res = _execute_impl(cp, mem, backend, max_batch, faults, rng, tunings,
+                            mesh)
         sp.set(resolved=res.backend, cycles=res.cycles)
     wall_us = (time.perf_counter() - t0) * 1e6
     label = res.backend.split("@", 1)[0]
@@ -670,6 +706,7 @@ def _execute_impl(
     faults,
     rng,
     tunings,
+    mesh=None,
 ) -> EngineResult:
     from .fused import (build_jax_fused, build_jax_fused_real,
                         jax_fuse_eligible, run_numpy_fused, schedule_for)
@@ -680,12 +717,22 @@ def _execute_impl(
     assert mem.shape[1:] == (cp.rows, cp.cols), (mem.shape, cp.rows, cp.cols)
     mem = np.ascontiguousarray(mem, dtype=np.uint8)
 
+    # device topology the batch could shard over: >1 only when the mesh has
+    # a usable 'tiles' axis, the batch fills it, and the run is fault-free
+    # (fault realizations stay on the audited single-device paths)
+    topo = 1
+    if mesh is not None and faults is None and have_jax():
+        from ..distributed.mesh_exec import mesh_devices
+        D = mesh_devices(mesh)
+        if D > 1 and mem.shape[0] >= D:
+            topo = D
+
     base, variant = parse_backend(backend)
     label = backend
     if base == "auto":
         from .autotune import resolve_auto
         resolved, mb, _src = resolve_auto(cp, mem.shape[0], faults=faults,
-                                          table=tunings)
+                                          table=tunings, topo=topo)
         base, variant = parse_backend(resolved)
         if max_batch is None and mb is not None:
             max_batch = mb
@@ -733,6 +780,17 @@ def _execute_impl(
         raise ValueError(
             f"FaultRealization batch {faults.batch} != memory batch {B}; "
             f"sample the realization for the batch it will run under")
+
+    if topo > 1 and base == "jax" and faults is None:
+        from ..distributed.mesh_exec import try_run_sharded
+        sharded = try_run_sharded(cp, mem, variant, mesh)
+        if sharded is not None:
+            out, D, _n = sharded
+            if squeeze:
+                out = out[0]
+            return EngineResult(mem=out, cycles=cp.n_cycles,
+                                stats=dict(cp.stats),
+                                backend=f"{label}+mesh{D}", faults=faults)
 
     rng = as_rng(rng) if isinstance(faults, FaultModel) else None
     jax_dtype = _word_dtype(step) if base == "jax" else None

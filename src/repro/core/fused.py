@@ -272,12 +272,15 @@ def jax_fuse_eligible(cp: CompiledProgram) -> bool:
 
 
 def _build_jax_fused(cp: CompiledProgram, np_dtype,
-                     realization: bool = False):
+                     realization: bool = False, body_only: bool = False):
     """Build the jitted fused runner for ``cp`` at word dtype ``np_dtype``.
 
     Returns ``runner(mem)`` (ideal) or ``runner(mem, real)`` where ``real``
     is a :class:`FaultRealization` packed to runtime arguments, so one jit
-    serves every realization of the same shape.
+    serves every realization of the same shape. ``body_only=True`` instead
+    returns the un-jitted ideal packed-buffer transition
+    ``body(buf) -> buf`` — the seam the mesh executor vmaps and shard_maps
+    (``repro.distributed.mesh_exec``).
     """
     import jax
     import jax.numpy as jnp
@@ -465,13 +468,16 @@ def _build_jax_fused(cp: CompiledProgram, np_dtype,
         else:
             seg_fns.append(lower_scan(seg, si))
 
+    def ideal_body(buf):
+        for fn in seg_fns:
+            buf = fn(buf, None, None)
+        return buf
+
+    if body_only:
+        return ideal_body
+
     if not realization:
-        @jax.jit
-        def run_ideal(buf0):
-            buf = buf0
-            for fn in seg_fns:
-                buf = fn(buf, None, None)
-            return buf
+        run_ideal = jax.jit(ideal_body)
 
         def runner(mem_np: np.ndarray) -> np.ndarray:
             B = mem_np.shape[0]
@@ -533,6 +539,18 @@ def build_jax_fused(cp: CompiledProgram, np_dtype):
     if runner is None:
         runner = cp._caches[key] = _build_jax_fused(cp, np_dtype)
     return runner
+
+
+def jax_fused_body(cp: CompiledProgram, np_dtype):
+    """Un-jitted ideal fused transition ``body(buf) -> buf`` on one packed
+    ``(C+1, R+1)`` buffer, memoized per (program, dtype); the mesh executor
+    vmaps this over per-device chunk stacks inside ``shard_map``."""
+    key = ("jax_fused_body", np.dtype(np_dtype).name)
+    body = cp._caches.get(key)
+    if body is None:
+        body = cp._caches[key] = _build_jax_fused(cp, np_dtype,
+                                                  body_only=True)
+    return body
 
 
 def build_jax_fused_real(cp: CompiledProgram, np_dtype):

@@ -216,6 +216,7 @@ class CrossbarPlan:
         faults=None,
         rng=None,
         tunings=None,
+        mesh=None,
     ) -> EngineResult:
         """Run this plan's program over ``(B, rows, cols)`` crossbars at once.
 
@@ -223,6 +224,8 @@ class CrossbarPlan:
         (slow; useful for equivalence checks of batched/tiled paths).
         With ``faults``, every crossbar in the batch draws an independent
         fault realization — the Monte-Carlo axis of ``repro.device``.
+        ``mesh`` (or an ambient ``distributed.sharding.use_mesh``) shards the
+        batch axis over a jax device mesh — see ``distributed.mesh_exec``.
         """
         if backend == "interp":
             self._reject_interp_faults(faults)
@@ -238,4 +241,4 @@ class CrossbarPlan:
                                 stats=dict(xb.stats), backend="interp")
         return execute(self.compile(), mems, backend=backend,
                        max_batch=max_batch, faults=faults, rng=rng,
-                       tunings=tunings)
+                       tunings=tunings, mesh=mesh)

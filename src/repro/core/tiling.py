@@ -40,7 +40,7 @@ class TiledResult:
     n_tiles: int
     cycles: int                # per-tile program length (tiles run in lockstep)
     reduce_depth: int          # host tree-reduction levels (0 = none needed)
-    backend: str
+    backend: str               # engine-resolved label (e.g. "jax+mesh8")
 
 
 class _TiledEnergyMixin:
@@ -91,30 +91,39 @@ def majority_sign(pop: np.ndarray, n: int) -> np.ndarray:
 
 def _execute_tiles(plan, n_tiles: int, load_tile, decode_tile,
                    backend: str, max_batch: Optional[int],
-                   faults=None, rng=None):
+                   faults=None, rng=None, mesh=None):
     """Load/execute/decode tiles in bounded-size batches.
 
     Chunking only bounds host memory — every chunk runs the identical
     compiled program, so the reported in-array latency (one program length,
     all tiles in lockstep) is unchanged. With ``faults``, every tile draws
     an independent device-fault realization from the shared ``rng``.
+
+    With a ``mesh`` (explicit or ambient via
+    ``distributed.sharding.use_mesh``), fault-free batches hand the whole
+    tile axis to the engine in larger host chunks so
+    ``distributed.mesh_exec`` can shard it across devices; results stay
+    bit-identical to the single-device loop.
     """
     if faults is not None:
         rng = np.random.default_rng(rng)  # one stream across all chunks
-    step = max_batch or 64
+    step = max_batch or (min(n_tiles, 256) if mesh is not None
+                         and faults is None else 64)
     results = [None] * n_tiles
     cycles = 0
+    label = backend
     for s in range(0, n_tiles, step):
         e = min(n_tiles, s + step)
         mems = np.zeros((e - s, plan.rows, plan.cols), dtype=np.uint8)
         for b in range(s, e):
             load_tile(b, mems[b - s])
         res = plan.execute_batch(mems, backend=backend, faults=faults,
-                                 rng=rng)
+                                 rng=rng, mesh=mesh)
         cycles = res.cycles
+        label = res.backend
         for b in range(s, e):
             results[b] = decode_tile(b, res.mem[b - s])
-    return results, cycles
+    return results, cycles, label
 
 
 def max_matvec_block(N: int, cols: int = 1024, parts: int = 32) -> int:
@@ -181,20 +190,22 @@ class TiledMatvec(_TiledEnergyMixin):
         return load, decode, finalize
 
     def run(self, A: np.ndarray, x: np.ndarray, backend: str = "numpy",
-            max_batch: Optional[int] = None, faults=None, rng=None
-            ) -> Tuple[np.ndarray, TiledResult]:
+            max_batch: Optional[int] = None, faults=None, rng=None,
+            mesh=None) -> Tuple[np.ndarray, TiledResult]:
         load, decode, finalize = self.bind(A, x)
-        partials, cycles = _execute_tiles(
+        partials, cycles, label = _execute_tiles(
             self.plan, self.n_tiles, load, decode,
-            backend, max_batch, faults, rng)
+            backend, max_batch, faults, rng, mesh)
         y, depth = finalize(partials)
         return y, TiledResult((self.gm, self.gk), self.n_tiles, cycles,
-                              depth, backend)
+                              depth, label)
 
 
 def _run_kw(kw):
-    """Split run-time kwargs (backend/max_batch/faults/rng) from plan kwargs."""
-    return {k: kw.pop(k) for k in ("backend", "max_batch", "faults", "rng")
+    """Split run-time kwargs (backend/max_batch/faults/rng/mesh) from plan
+    kwargs."""
+    return {k: kw.pop(k)
+            for k in ("backend", "max_batch", "faults", "rng", "mesh")
             if k in kw}
 
 
@@ -267,17 +278,17 @@ class TiledBinaryMatvec(_TiledEnergyMixin):
         return load, decode, finalize
 
     def run(self, A: np.ndarray, x: np.ndarray, backend: str = "numpy",
-            max_batch: Optional[int] = None, faults=None, rng=None
-            ) -> Tuple[np.ndarray, TiledResult]:
+            max_batch: Optional[int] = None, faults=None, rng=None,
+            mesh=None) -> Tuple[np.ndarray, TiledResult]:
         load, decode, finalize = self.bind(A, x)
-        partials, cycles = _execute_tiles(
+        partials, cycles, label = _execute_tiles(
             self.plan, self.n_tiles, load, decode,
-            backend, max_batch, faults, rng)
+            backend, max_batch, faults, rng, mesh)
         pop_flat, depth = finalize(partials)
         y = majority_sign(pop_flat, self.K)
         self.last_popcounts = pop_flat  # XNOR matches per row (dot = 2*pop - K)
         return y, TiledResult((self.gm, self.gk), self.n_tiles, cycles,
-                              depth, backend)
+                              depth, label)
 
     def popcounts(self, A: np.ndarray, x: np.ndarray,
                   backend: str = "numpy") -> np.ndarray:
@@ -288,7 +299,7 @@ class TiledBinaryMatvec(_TiledEnergyMixin):
     def popcounts_many(self, A: np.ndarray, X: np.ndarray,
                        backend: str = "numpy",
                        max_batch: Optional[int] = None,
-                       faults=None, rng=None) -> np.ndarray:
+                       faults=None, rng=None, mesh=None) -> np.ndarray:
         """Popcounts of one A against J vectors: X is (J, K), returns (J, M).
 
         All J · gm · gk (vector, tile) pairs execute as ONE engine batch —
@@ -313,10 +324,10 @@ class TiledBinaryMatvec(_TiledEnergyMixin):
                                    kk * tk : (kk + 1) * tk],
                            Xp[j, kk * tk : (kk + 1) * tk])
 
-        partials, _ = _execute_tiles(
+        partials, _, _ = _execute_tiles(
             plan, J * gm * gk, load,
             lambda b, mem: plan.decode_popcount(mem).astype(np.int64),
-            backend, max_batch, faults, rng)
+            backend, max_batch, faults, rng, mesh)
 
         pop = np.empty((J, gm * tm), dtype=np.int64)
         for j in range(J):
@@ -420,15 +431,15 @@ class TiledConv2d:
         return load, decode, finalize
 
     def run(self, A: np.ndarray, Kk: np.ndarray, backend: str = "numpy",
-            max_batch: Optional[int] = None, faults=None, rng=None
-            ) -> Tuple[np.ndarray, TiledResult]:
+            max_batch: Optional[int] = None, faults=None, rng=None,
+            mesh=None) -> Tuple[np.ndarray, TiledResult]:
         load, decode, finalize = self.bind(A, Kk)
-        tiles, cycles = _execute_tiles(
+        tiles, cycles, label = _execute_tiles(
             self.plan, self.n_tiles, load, decode, backend, max_batch,
-            faults, rng)
+            faults, rng, mesh)
         out, _ = finalize(tiles)
         return out, TiledResult(
-            (self.gh, self.gw), self.n_tiles, cycles, 0, backend)
+            (self.gh, self.gw), self.n_tiles, cycles, 0, label)
 
 
 def tiled_conv2d(A: np.ndarray, Kk: np.ndarray, N: int, **kw):

@@ -94,6 +94,10 @@ def run_resilient_loop(
     step index, resume (deterministic batches make this exact).
     """
     straggler = StragglerDetector()
+    # injection bookkeeping pops entries as they fire; work on a copy so a
+    # caller reusing one fail_at config gets its failures re-injected on the
+    # next run instead of a silent clean pass
+    fail_at = dict(fail_at) if fail_at else fail_at
     step = start_step
     while step < n_steps:
         try:

@@ -31,6 +31,7 @@ RULES = {
     "vocab": "model",
     "d_inner": "model",          # mamba inner dim (TP)
     "cache_seq": "model",        # decode KV cache sequence axis (split-K)
+    "tiles": "tiles",            # MatPIM packed tile-chunk axis (mesh_exec)
     "embed": None,
     "head_dim": None,
     "layers": None,

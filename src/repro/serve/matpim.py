@@ -95,10 +95,13 @@ class CacheStats:
     compile_s: float = 0.0  # wall time spent building/compiling plans (misses)
     # wall of each plan's FIRST engine batch: backend tracing/compilation
     # (jax jit etc.) that would otherwise be mis-attributed to steady-state
-    # execute. compile_s + warmup_s is the true cost of a cold plan.
+    # execute. compile_s + warmup_s is the true cost of a cold plan —
+    # prewarmed plans pay it on the worker pool instead of the first request,
+    # but it still lands here, so the identity is unchanged.
     warmup_s: float = 0.0
     async_compiles: int = 0   # misses compiled off-path by the worker pool
     store_hits: int = 0       # misses served from the persistent plan store
+    prewarms: int = 0         # plans whose executor warm-up ran off-path
 
     @property
     def hit_rate(self) -> float:
@@ -130,6 +133,7 @@ class Ticket:
     batch_units: Optional[int] = None  # crossbars coalesced in that batch
     queue_steps: int = 0            # serve-loop steps spent waiting
     submitted_s: Optional[float] = None  # perf_counter stamp at submit
+    device: int = 0                 # device slot the serving bucket ran on
     done: bool = False
 
 
@@ -153,6 +157,7 @@ class _Pending:
     finalize: Callable              # partials -> request result
     faults: object = None
     submitted_step: int = 0
+    running: bool = False           # claimed by an in-flight bucket execute
 
 
 def _concat_realizations(reals: List[FaultRealization]) -> FaultRealization:
@@ -188,7 +193,9 @@ class PlanService:
                  max_starve_steps: int = 4, tunings=None,
                  autotune: Optional[bool] = None,
                  async_compile: bool = False, compile_workers: int = 2,
-                 compile_queue: int = 8, store=None):
+                 compile_queue: int = 8, store=None,
+                 devices: Optional[int] = None,
+                 prewarm: Optional[bool] = None):
         self.max_plans = int(max_plans)
         self.fuse = bool(fuse)
         self.backend = backend
@@ -244,6 +251,18 @@ class PlanService:
         # plan key -> (CompileJob, wrapper) for in-flight async compiles;
         # buckets whose key is here are parked until the job lands
         self._compiling: Dict[tuple, tuple] = {}
+        # off-path executor warm-up (ROADMAP: the ~1.1 s jitted-runner build
+        # dominates restart cost). Default: on whenever plans can arrive
+        # already-compiled (async pool or persistent store) — exactly the
+        # paths where the first request would otherwise pay the warm-up.
+        self.prewarm = ((self.store is not None or async_compile)
+                        if prewarm is None else bool(prewarm))
+        # multi-device bucket dispatch: up to ``devices`` independent ready
+        # buckets execute concurrently, each pinned to a local jax device
+        # slot (numpy buckets still overlap through GIL-released kernels).
+        # devices=1 (default) keeps the serial loop.
+        self.devices = max(1, int(devices)) if devices else 1
+        self._exec_pool = None          # lazy ThreadPoolExecutor (devices>1)
         # coarse re-entrant lock over cache/queue/stats state: submit_* and
         # the execute loops are safe to call from multiple threads. Workers
         # never take it (job closures touch only wrapper + store), so
@@ -255,6 +274,9 @@ class PlanService:
         if self._pool is not None:
             self._pool.shutdown()
             self._pool = None
+        if self._exec_pool is not None:
+            self._exec_pool.shutdown(wait=True)
+            self._exec_pool = None
 
     # -- plan cache ----------------------------------------------------------
 
@@ -305,10 +327,69 @@ class PlanService:
         """Miss path on the caller's thread: store load, else lower+put."""
         if self._load_from_store(key, w.plan):
             self.stats.store_hits += 1
+            # the trace arrived pre-compiled, but the executor artifacts
+            # (replay plan / jitted runners) did not: warm them on the pool
+            # so the first request doesn't pay the ~1.1 s restart tax
+            self._prewarm_async(key, w)
             return
         cp = w.plan.compile(fuse=self.fuse)
         if self.store is not None and not self.store.entry_path(key).exists():
             self.store.put(key, cp)
+
+    def _warm_executors(self, cp) -> float:
+        """Build ``cp``'s heavy executor artifacts (numpy replay plan, jax
+        jitted runners) ahead of the first request; returns the wall spent.
+
+        Runs on a compile-pool worker: touches only ``cp._caches`` (and the
+        jax compilation cache), never service state.
+        """
+        t0 = time.perf_counter()
+        backend = self.backend
+        if backend in ("numpy", "auto", "numpy-fused", "numpy-unfused"):
+            prewarm_replay(cp)
+        if backend in ("jax", "jax-fused", "jax-unfused", "auto"):
+            from ..core.engine import JAX_WORD_BITS, execute, have_jax
+            if have_jax():
+                # one word-wide dummy batch jits the runner at the word dtype
+                # real buckets use; the run itself is a few ms on top
+                B = min(JAX_WORD_BITS,
+                        self.max_batch or JAX_WORD_BITS)
+                dummy = np.zeros((B, cp.rows, cp.cols), dtype=np.uint8)
+                execute(cp, dummy, backend="jax" if backend == "auto"
+                        else backend, max_batch=self.max_batch)
+        return time.perf_counter() - t0
+
+    def _prewarm_async(self, key: tuple, w) -> bool:
+        """Queue an off-path executor warm-up for an already-compiled plan.
+
+        Parks ``key`` exactly like an async compile, so the plan's buckets
+        wait for the (cheap) warm instead of re-paying it inline; the
+        standard :meth:`_collect_landed` machinery accounts the warm wall in
+        ``CacheStats.warmup_s`` and marks the plan served-once. Backpressure
+        (full pool queue) just skips the warm-up — the first batch then pays
+        it, which is today's behavior.
+        """
+        if not self.prewarm or key in self._compiling:
+            return False
+        if self._pool is None:
+            self._pool = CompilePool(workers=self._compile_workers,
+                                     max_queue=self._compile_queue)
+        plan, fuse, warm = w.plan, self.fuse, self._warm_executors
+
+        def job():
+            info = {"store_hit": False, "warm_s": 0.0, "prewarmed": False}
+            try:
+                info["warm_s"] = warm(plan.compile(fuse=fuse))
+                info["prewarmed"] = True
+            except Exception:
+                pass    # warm-up is an optimization; the first batch heals
+            return info
+
+        job_h = self._pool.submit(key, job, block=False)
+        if job_h is None:
+            return False
+        self._compiling[key] = (job_h, w)
+        return True
 
     def _compile_async(self, key: tuple, w) -> bool:
         """Try to move the miss's compile onto the worker pool.
@@ -324,8 +405,8 @@ class PlanService:
         if self._pool is None:
             self._pool = CompilePool(workers=self._compile_workers,
                                      max_queue=self._compile_queue)
-        store, fuse, backend, plan = self.store, self.fuse, self.backend, \
-            w.plan
+        store, fuse, plan = self.store, self.fuse, w.plan
+        warm = self._warm_executors if self.prewarm else None
 
         def job():
             info = {"store_hit": False, "warm_s": 0.0, "prewarmed": False}
@@ -342,13 +423,16 @@ class PlanService:
                 if store is not None \
                         and not store.entry_path(key).exists():
                     store.put(key, cp)
-            if backend in ("numpy", "auto", "numpy-fused", "numpy-unfused"):
-                # build the numpy replay plan off-path too, so the plan's
-                # first real batch runs at steady-state speed
-                t0 = time.perf_counter()
-                prewarm_replay(cp)
-                info["warm_s"] = time.perf_counter() - t0
-                info["prewarmed"] = True
+            if warm is not None:
+                # build the executor artifacts (replay plan / jitted
+                # runners) off-path too, so the plan's first real batch runs
+                # at steady-state speed; warm failure is non-fatal — the
+                # first batch self-heals — unlike a compile failure above
+                try:
+                    info["warm_s"] = warm(cp)
+                    info["prewarmed"] = True
+                except Exception:
+                    pass
             return info
 
         job_h = self._pool.submit(key, job, block=False)
@@ -392,11 +476,13 @@ class PlanService:
                 if info.get("store_hit"):
                     self.stats.store_hits += 1
                 if info.get("prewarmed"):
-                    # replay-plan build already paid on the worker: account
+                    # executor warm-up already paid on the worker: account
                     # it as warm-up and let the first batch count as steady
                     w._served_once = True
                     self.stats.warmup_s += info["warm_s"]
+                    self.stats.prewarms += 1
                     _metrics.counter("serve.warmup_s").inc(info["warm_s"])
+                    _metrics.counter("serve.prewarms").inc()
             _metrics.histogram("serve.compile_wait_us").observe(
                 (job.finished_s - job.submitted_s) * 1e6)
             landed += 1
@@ -613,10 +699,13 @@ class PlanService:
     def _buckets(self, ready_only: bool = True) \
             -> "OrderedDict[tuple, List[_Pending]]":
         """Pending requests grouped by exec key; ``ready_only`` skips
-        buckets parked behind an in-flight async compile."""
+        buckets parked behind an in-flight async compile. Requests already
+        claimed by an in-flight bucket execute are never regrouped."""
         comp = self._compiling
         out: "OrderedDict[tuple, List[_Pending]]" = OrderedDict()
         for p in self._queue:
+            if p.running:
+                continue
             if ready_only and comp and p.ticket.key in comp:
                 continue
             out.setdefault(self._exec_key(p), []).append(p)
@@ -650,83 +739,178 @@ class PlanService:
             us = (time.perf_counter() - t0) * 1e6
             resolved = res.backend
             if resolved.startswith("auto:"):
-                resolved, _, mb = resolved[len("auto:"):].partition("@")
+                # label grammar: auto:<backend>[@<max_batch>][+mesh<D>] —
+                # sharded walls train the entry for *that* topology only
+                resolved, _, meshpart = \
+                    resolved[len("auto:"):].partition("+mesh")
+                resolved, _, mb = resolved.partition("@")
                 table.observe(key, bucket, resolved, us,
-                              max_batch=int(mb) if mb else None)
+                              max_batch=int(mb) if mb else None,
+                              topo=int(meshpart) if meshpart else 1)
             return res
         return plan.execute_batch(mems, backend=self.backend,
                                   max_batch=self.max_batch, faults=faults,
                                   rng=rng, tunings=self.tunings)
 
-    def _run_bucket(self, pends: List[_Pending]) -> List[Ticket]:
-        """Coalesce one bucket onto the engine batch axis and scatter back."""
+    def _device_ctx(self, slot: int):
+        """Pin a bucket's engine work to local jax device ``slot``.
+
+        A no-op for single-device services, numpy-family backends (nothing
+        to place — threads overlap through GIL-released kernels), or hosts
+        without jax; jax buckets on different slots then compile + execute
+        on distinct devices, so concurrent buckets don't serialize behind
+        one device queue.
+        """
+        import contextlib
+        if self.devices <= 1 or not (
+                self.backend == "auto" or self.backend.startswith("jax")):
+            return contextlib.nullcontext()
+        from ..core.engine import have_jax
+        if not have_jax():
+            return contextlib.nullcontext()
+        import jax
+        devs = jax.devices()
+        return jax.default_device(devs[slot % len(devs)])
+
+    def _run_bucket(self, pends: List[_Pending], slot: int = 0
+                    ) -> List[Ticket]:
+        """Coalesce one bucket onto the engine batch axis and scatter back.
+
+        Thread-safe: load/execute run without the service lock (this is the
+        part :meth:`_run_buckets` overlaps across device slots); the
+        warm-up claim and the decode/scatter bookkeeping take it.
+        """
         w = pends[0].wrapper
         plan = w.plan
         units = sum(p.ticket.n_units for p in pends)
-        with _span("serve.bucket", kind=pends[0].ticket.kind, units=units,
-                   requests=len(pends)):
-            with _span("serve.load", units=units):
-                mems = np.zeros((units, plan.rows, plan.cols), dtype=np.uint8)
-                off = 0
-                for p in pends:
-                    for b in range(p.ticket.n_units):
-                        p.load(b, mems[off + b])
-                    off += p.ticket.n_units
-            faults = rng = None
-            if pends[0].faults is not None:
-                if isinstance(pends[0].faults, FaultRealization):
-                    faults = _concat_realizations([p.faults for p in pends])
-                else:
-                    faults, rng = pends[0].faults, self._rng
-            warm_up = not getattr(w, "_served_once", False)
-            t0 = time.perf_counter()
-            res = self._execute_bucket(plan, mems, faults, rng)
-            wall = time.perf_counter() - t0
-            if warm_up:
-                # first engine batch through this plan pays backend tracing /
-                # jit compilation: account it as warm-up, not steady state
-                w._served_once = True
-                self.stats.warmup_s += wall
-                _metrics.counter("serve.warmup_s").inc(wall)
-            done = []
-            with _span("serve.decode", units=units):
-                off = 0
-                for p in pends:
-                    partials = [p.decode(b, res.mem[off + b])
-                                for b in range(p.ticket.n_units)]
-                    off += p.ticket.n_units
-                    t = p.ticket
-                    t.result, t.reduce_depth = p.finalize(partials)
-                    t.cycles = res.cycles
-                    t.batch_wall_s = wall
-                    t.wall_s = (time.perf_counter() - t.submitted_s
-                                if t.submitted_s is not None else wall)
-                    t.batch_units = units
-                    # steps the request sat queued before the one serving it
-                    t.queue_steps = max(0, self._step - p.submitted_step - 1)
-                    t.done = True
-                    _metrics.histogram("serve.request_latency_us") \
-                        .observe(t.wall_s * 1e6)
-                    _metrics.histogram("serve.queue_steps") \
-                        .observe(t.queue_steps)
-                    done.append(t)
-                    self._queue.remove(p)
-        self.stats.batches += 1
-        self.stats.units += units
+        try:
+            with _span("serve.bucket", kind=pends[0].ticket.kind,
+                       units=units, requests=len(pends), device=slot):
+                with _span("serve.load", units=units):
+                    mems = np.zeros((units, plan.rows, plan.cols),
+                                    dtype=np.uint8)
+                    off = 0
+                    for p in pends:
+                        for b in range(p.ticket.n_units):
+                            p.load(b, mems[off + b])
+                        off += p.ticket.n_units
+                faults = rng = None
+                if pends[0].faults is not None:
+                    if isinstance(pends[0].faults, FaultRealization):
+                        faults = _concat_realizations(
+                            [p.faults for p in pends])
+                    else:
+                        faults, rng = pends[0].faults, self._rng
+                with self._lock:
+                    # claim the warm-up before executing so two concurrent
+                    # buckets on one plan can't both book it
+                    warm_up = not getattr(w, "_served_once", False)
+                    w._served_once = True
+                t0 = time.perf_counter()
+                with self._device_ctx(slot):
+                    res = self._execute_bucket(plan, mems, faults, rng)
+                wall = time.perf_counter() - t0
+                _metrics.counter(f"serve.device.{slot}.batches").inc()
+                _metrics.histogram(f"serve.device.{slot}.busy_us") \
+                    .observe(wall * 1e6)
+                done = []
+                with _span("serve.decode", units=units), self._lock:
+                    if warm_up:
+                        # first engine batch through this plan pays backend
+                        # tracing / jit compilation: account it as warm-up,
+                        # not steady state
+                        self.stats.warmup_s += wall
+                        _metrics.counter("serve.warmup_s").inc(wall)
+                    off = 0
+                    for p in pends:
+                        partials = [p.decode(b, res.mem[off + b])
+                                    for b in range(p.ticket.n_units)]
+                        off += p.ticket.n_units
+                        t = p.ticket
+                        t.result, t.reduce_depth = p.finalize(partials)
+                        t.cycles = res.cycles
+                        t.batch_wall_s = wall
+                        t.wall_s = (time.perf_counter() - t.submitted_s
+                                    if t.submitted_s is not None else wall)
+                        t.batch_units = units
+                        t.device = slot
+                        # steps the request sat queued before the serving one
+                        t.queue_steps = max(
+                            0, self._step - p.submitted_step - 1)
+                        t.done = True
+                        _metrics.histogram("serve.request_latency_us") \
+                            .observe(t.wall_s * 1e6)
+                        _metrics.histogram("serve.queue_steps") \
+                            .observe(t.queue_steps)
+                        done.append(t)
+                        self._queue.remove(p)
+        finally:
+            for p in pends:     # release claims (no-op for scattered ones)
+                p.running = False
+        with self._lock:
+            self.stats.batches += 1
+            self.stats.units += units
         _metrics.counter("serve.batches").inc()
         _metrics.counter("serve.units").inc(units)
         _metrics.histogram("serve.batch_units").observe(units)
         return done
 
+    def _run_buckets(self, ready: List[List[_Pending]]) -> List[Ticket]:
+        """Execute independent ready buckets, overlapping across device
+        slots when ``devices > 1``.
+
+        ``FaultModel`` buckets stay serial — they draw from the service's
+        single RNG stream, and overlapping them would make sampling depend
+        on scheduling. Everything else dispatches onto a bounded thread
+        pool, one bucket per device slot.
+        """
+        if self.devices <= 1 or len(ready) <= 1:
+            done = []
+            for ps in ready:
+                done.extend(self._run_bucket(ps))
+            return done
+        par, ser = [], []
+        for ps in ready:
+            (ser if isinstance(ps[0].faults, FaultModel)
+             else par).append(ps)
+        done: List[Ticket] = []
+        if len(par) > 1:
+            if self._exec_pool is None:
+                from concurrent.futures import ThreadPoolExecutor
+                self._exec_pool = ThreadPoolExecutor(
+                    max_workers=self.devices,
+                    thread_name_prefix="serve-device")
+            futs = [self._exec_pool.submit(self._run_bucket, ps,
+                                           i % self.devices)
+                    for i, ps in enumerate(par)]
+            for f in futs:
+                done.extend(f.result())
+        else:
+            for ps in par:
+                done.extend(self._run_bucket(ps))
+        for ps in ser:
+            done.extend(self._run_bucket(ps))
+        return done
+
+    def _claim(self, ready: List[List[_Pending]]) -> None:
+        """Mark the selected buckets in-flight (caller holds the lock), so
+        a concurrent flush/step never double-executes them."""
+        for ps in ready:
+            for p in ps:
+                p.running = True
+
     def flush(self) -> List[Ticket]:
-        """Run every pending request, one coalesced batch per bucket.
+        """Run every pending request, coalesced per bucket; with
+        ``devices > 1`` up to that many independent ready buckets execute
+        concurrently per iteration (async per-device dispatch).
 
         Buckets parked behind an in-flight async compile are skipped until
         their plan lands; when nothing is ready the loop blocks on the
         earliest compile job instead of spinning.
         """
         done = []
-        with _span("serve.flush", pending_units=self.pending_units):
+        with _span("serve.flush", pending_units=self.pending_units,
+                   devices=self.devices):
             while self._queue:
                 self._collect_landed()
                 with self._lock:
@@ -735,12 +919,19 @@ class PlanService:
                         # defensive: a failed job already un-parked its
                         # bucket; execute compiles synchronously if needed
                         buckets = self._buckets(ready_only=False)
-                    if buckets:
+                    ready = list(buckets.values())[:self.devices]
+                    if ready:
                         self._step += 1
-                        done.extend(self._run_bucket(
-                            next(iter(buckets.values()))))
-                        continue
-                self._collect_landed(wait=True, timeout=1.0)
+                        self._claim(ready)
+                if ready:
+                    done.extend(self._run_buckets(ready))
+                    continue
+                if self._compiling:
+                    self._collect_landed(wait=True, timeout=1.0)
+                else:
+                    # every pending request is claimed by another thread's
+                    # in-flight bucket; yield until it scatters
+                    time.sleep(0.001)
         _metrics.gauge("serve.queue_depth_units").set(0)
         return done
 
@@ -777,14 +968,16 @@ class PlanService:
             def age(ps):
                 return self._step - min(p.submitted_step for p in ps)
 
+            def units_of(ps):
+                return sum(p.ticket.n_units for p in ps)
+
             starved = [ps for ps in buckets
                        if age(ps) > self.max_starve_steps]
             if starved:
-                pends = max(starved, key=age)
+                primary = max(starved, key=age)
             else:
-                pends = max(buckets,
-                            key=lambda ps: sum(p.ticket.n_units
-                                               for p in ps))
+                primary = max(buckets, key=units_of)
+            pends = primary
             if max_units is not None:
                 take, acc = [], 0
                 for p in pends:
@@ -793,10 +986,18 @@ class PlanService:
                     take.append(p)
                     acc += p.ticket.n_units
                 pends = take
-            with _span("serve.step", step=self._step,
-                       pending_units=self.pending_units,
-                       starved=bool(starved)):
-                done = self._run_bucket(pends)
+            ready = [pends]
+            if self.devices > 1:
+                # fill the remaining device slots with the next-fullest
+                # ready buckets so heterogeneous streams overlap
+                rest = sorted((ps for ps in buckets if ps is not primary),
+                              key=units_of, reverse=True)
+                ready += rest[:self.devices - 1]
+            self._claim(ready)
+        with _span("serve.step", step=self._step,
+                   pending_units=self.pending_units,
+                   starved=bool(starved), buckets=len(ready)):
+            done = self._run_buckets(ready)
         _metrics.counter("serve.steps").inc()
         _metrics.gauge("serve.queue_depth_units").set(self.pending_units)
         return done

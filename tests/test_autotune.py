@@ -69,6 +69,54 @@ def test_missing_file_is_empty_not_error(tmp_path):
     assert len(t) == 0 and t.load_error is None
 
 
+def test_topology_keys_are_isolated(tmp_path):
+    """A 1-device measurement never resolves an 8-device sharded execute
+    (and vice versa): entries are keyed by device topology."""
+    p = tmp_path / "tunings.json"
+    t = at.TuningTable(p)
+    t.record("k1", 32, "numpy-unfused", 50.0)              # topo=1
+    t.record("k1", 32, "jax-fused", 400.0, topo=8)
+    assert t.lookup("k1", 32).backend == "numpy-unfused"
+    assert t.lookup("k1", 32, topo=8).backend == "jax-fused"
+    assert t.lookup("k1", 32, topo=4) is None
+    t.save()
+    r = at.TuningTable(p)
+    assert len(r) == 2
+    assert r.lookup("k1", 32, topo=8).backend == "jax-fused"
+    # observe folds into its own topology only
+    r.observe("k1", 32, "numpy-fused", 10.0, topo=4)
+    assert r.lookup("k1", 32, topo=4).backend == "numpy-fused"
+    assert r.lookup("k1", 32).backend == "numpy-unfused"
+
+
+def test_schema1_table_loads_as_topo1_heuristic(tmp_path):
+    """Pre-topology (schema 1) tables were measured before the topology
+    axis existed: they load as usable topo-1 *heuristic* hints, never as
+    authoritative measurements, and never resolve sharded executes."""
+    p = tmp_path / "tunings.json"
+    p.write_text(json.dumps({
+        "schema": 1,
+        "entries": {"KEY|32": {"backend": "numpy-unfused", "us": 42.0,
+                               "max_batch": None, "source": "measured"}}}))
+    t = at.TuningTable(p)
+    assert t.load_error is None and len(t) == 1
+    e = t.lookup("KEY", 32)
+    assert e is not None and e.source == "heuristic"
+    assert t.lookup("KEY", 32, topo=8) is None
+
+    plan, _, _, _ = _bmv_fixture()
+    cp = plan.compile()
+    t.record(at.program_key(cp), at.batch_bucket(4), "numpy-unfused", 42.0,
+             source="heuristic")   # simulate a demoted legacy entry
+    be, mb, source = at.resolve_auto(cp, 4, table=t)
+    assert (be, source) == ("numpy-unfused", "heuristic")  # hint honored
+    be8, _, src8 = at.resolve_auto(cp, 4, table=t, topo=8)
+    assert src8 == "heuristic"
+    from repro.core.engine import have_jax
+    if have_jax():
+        assert be8.startswith("jax")   # sharding needs a jax variant
+
+
 @pytest.mark.parametrize("payload", [
     "{ not json",                                          # corrupt
     json.dumps({"schema": 0, "entries": {}}),              # stale schema
@@ -253,15 +301,15 @@ def test_service_cold_bucket_micro_tunes(tmp_path):
     assert np.array_equal(tk.result, _bmv_oracle(A, x))
     entries = table.entries()
     assert len(entries) == 1
-    (key, bucket), e = next(iter(entries.items()))
-    assert e.source == "measured"
+    (key, bucket, topo), e = next(iter(entries.items()))
+    assert e.source == "measured" and topo == 1
     # the cold tune persisted the table to disk for later processes
     assert (tmp_path / "svc_tunings.json").exists()
     # a second request of the same shape is warm: entry count is unchanged
     tk2 = svc.submit_binary_matvec(A, x)
     svc.flush()
     assert np.array_equal(tk2.result, _bmv_oracle(A, x))
-    assert set(table.entries()) == {(key, bucket)}
+    assert set(table.entries()) == {(key, bucket, topo)}
 
 
 def test_service_eviction_does_not_orphan_tunings():

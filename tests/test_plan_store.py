@@ -262,3 +262,44 @@ def test_env_default_store(tmp_path, monkeypatch):
         plan_store.reset_default_store()
         if jax is not None:      # undo the env store's jax-cache repoint
             jax.config.update("jax_compilation_cache_dir", saved)
+
+
+# ---------------------------------------------------------------------------
+# Off-path executor prewarm: a store-hit plan must not pay its ~1s runner
+# warm-up on the first request (ROADMAP: dominant restart cost)
+# ---------------------------------------------------------------------------
+
+
+def test_store_hit_prewarms_executors_off_path(tmp_path):
+    store = _store(tmp_path)
+    cold = PlanService(**GEOM, store=store)
+    first = _traffic(cold, np.random.default_rng(9))
+    assert cold.stats.prewarms == 0          # nothing arrived pre-compiled
+
+    warm = PlanService(**GEOM, store=store)
+    assert warm.prewarm                      # default: on for store-backed
+    second = _traffic(warm, np.random.default_rng(9))
+    warm.close()
+    s = warm.stats
+    assert s.store_hits == s.misses > 0
+    # every store hit queued an off-path warm-up, accounted as warmup_s
+    assert s.prewarms == s.store_hits
+    assert s.warmup_s > 0
+    # PR-8 reconciliation identities survive the prewarm accounting
+    assert s.hits + s.misses == s.requests
+    for a, b in zip(first, second):
+        np.testing.assert_array_equal(np.asarray(a.result),
+                                      np.asarray(b.result))
+
+
+def test_prewarm_opt_out_restores_inline_warmup(tmp_path):
+    store = _store(tmp_path)
+    cold = PlanService(**GEOM, store=store)
+    _traffic(cold, np.random.default_rng(13))
+
+    warm = PlanService(**GEOM, store=store, prewarm=False)
+    _traffic(warm, np.random.default_rng(13))
+    assert warm._pool is None                # no worker threads spawned
+    s = warm.stats
+    assert s.store_hits == s.misses > 0 and s.prewarms == 0
+    assert s.warmup_s > 0                    # first batch pays it inline

@@ -93,6 +93,49 @@ def test_resilient_loop_recovers(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_resilient_loop_does_not_mutate_callers_fail_at():
+    """Injection bookkeeping pops fired entries; the loop must pop from its
+    own copy so a reused injection config re-injects on the next run instead
+    of silently passing clean."""
+
+    class FakeCkpt:
+        def __init__(self):
+            self.saved = {}
+            self.restores = 0
+
+        def save(self, step, state, block=False):
+            self.saved[step] = state
+
+        def wait(self):
+            pass
+
+        def latest_step(self):
+            return max(self.saved) if self.saved else None
+
+        def restore(self, state, step):
+            self.restores += 1
+            return self.saved[step], {"step": step}
+
+    def step_fn(params, opt_state, batch):
+        return params + batch, opt_state, {}
+
+    def run(fail_at):
+        ck = FakeCkpt()
+        ck.save(0, (0, 0))
+        state = run_resilient_loop(step_fn, (0, 0), lambda i: i, ck,
+                                   n_steps=6, ckpt_every=2, fail_at=fail_at)
+        return state, ck
+
+    fail_at = {3: RuntimeError("injected")}
+    clean, _ = run(None)
+    first, ck1 = run(fail_at)
+    assert ck1.restores == 1 and first == clean
+    assert fail_at == {3: fail_at[3]}, \
+        "run_resilient_loop consumed the caller's fail_at dict"
+    second, ck2 = run(fail_at)          # reused config injects again
+    assert ck2.restores == 1 and second == clean
+
+
 def test_grad_compression_error_feedback():
     grads = {"w": jnp.asarray(np.random.default_rng(0).standard_normal(64),
                               jnp.float32)}
