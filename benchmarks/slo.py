@@ -19,8 +19,11 @@ Output is ``BENCH_slo.json`` at the repo root — one row per (mode, load
 factor) with p50/p95/p99 latency, achieved throughput, queue depth, plan-
 cache hit rate and batch count — plus a ``warm_restart`` block: a fresh
 service rebuilt from the persistent plan store replays the sweep traffic
-with zero compiles, pinning restart latency. ``benchmarks/report.py``
-validates the schema and delta-flags p95/cold-start regressions.
+with zero compiles, pinning restart latency and runner-build counts (one
+batch-polymorphic runner per program × backend; a re-replay must build
+zero). ``benchmarks/report.py`` validates the schema, hard-gates the
+first-batch/steady-p95 ratio and runner rebuilds, and delta-flags
+p95/cold-start regressions.
 ``--trace FILE`` additionally records a Chrome-trace/Perfetto span
 timeline of the whole sweep; ``--store DIR`` persists the plan store
 across invocations (run twice on one path for a true cross-process warm
@@ -42,7 +45,11 @@ import numpy as np
 
 ROOT = Path(__file__).resolve().parent.parent
 
-SCHEMA = 1
+# v2 added runner_builds / runner_rebuilds to the warm_restart block: the
+# canonical packed layout makes runners batch-polymorphic, so a restart
+# replay must build at most one runner per (program, backend) and a second
+# replay of the same traffic must build none at all
+SCHEMA = 2
 # offered load as a multiple of measured closed-loop capacity; >1 rows
 # deliberately probe the overload regime where queueing dominates latency
 LOAD_FACTORS = (0.25, 0.5, 1.0, 1.5)
@@ -167,12 +174,21 @@ def warm_restart_probe(store_path: Path, reqs, slots: int, backend: str,
     """Restart realism: a FRESH service rebuilt on the populated plan store
     replays the sweep's traffic with ZERO ``compile_program`` calls, and its
     very first request should land near steady-state latency (the block
-    records both so ``report.py`` can flag drift)."""
+    records both so ``report.py`` can gate the ratio).
+
+    Runner-build accounting rides along: ``runner_builds`` counts executor
+    runners built during the replay (batch-polymorphic runners mean at most
+    one per program × backend, however many batch sizes the traffic spans),
+    and ``runner_rebuilds`` counts builds during a SECOND replay of the very
+    same requests on the same service — it must be zero, or the runner
+    cache is being thrashed/rekeyed. Latencies come from the first pass
+    only."""
     from repro.obs import metrics
     from repro.serve.matpim import PlanService
     from repro.serve.plan_store import PlanStore
 
     base = metrics.counter("compile.programs").value
+    rc_base = metrics.counter("engine.runner_cache.builds").value
     svc = PlanService(rows=64, cols=256, parts=8, backend=backend,
                       max_plans=64, store=PlanStore(store_path))
     # first-batch latency: admit one slot window on the cold-restarted
@@ -188,6 +204,15 @@ def warm_restart_probe(store_path: Path, reqs, slots: int, backend: str,
     assert first_done, "restart probe: first step produced no results"
     tickets += svc.run_stream(it, slots=slots)   # drain the remainder
     wall = time.perf_counter() - t0
+    runner_builds = int(
+        metrics.counter("engine.runner_cache.builds").value - rc_base)
+    # second replay of the exact same traffic: every plan AND every runner
+    # is warm now, so any build here is a cache bug (latencies above come
+    # from the first pass only — this pass exists just for the counter)
+    rb_base = metrics.counter("engine.runner_cache.builds").value
+    svc.run_stream(iter(reqs), slots=slots)
+    runner_rebuilds = int(
+        metrics.counter("engine.runner_cache.builds").value - rb_base)
     svc.close()
     lat = [t.wall_s for t in tickets]
     block = {"requests": len(tickets), "replay_wall_s": wall,
@@ -198,12 +223,15 @@ def warm_restart_probe(store_path: Path, reqs, slots: int, backend: str,
              "store_hits": svc.stats.store_hits,
              "misses": svc.stats.misses,
              "compile_programs": int(
-                 metrics.counter("compile.programs").value - base)}
+                 metrics.counter("compile.programs").value - base),
+             "runner_builds": runner_builds,
+             "runner_rebuilds": runner_rebuilds}
     block.update(_percentiles_ms(lat))
     log(f"warm restart: {len(tickets)} reqs in {wall:.2f}s, first batch "
         f"{block['first_batch_ms']:.2f} ms vs steady p95 "
         f"{steady_p95_ms:.2f} ms, {block['store_hits']} store hits, "
-        f"{block['compile_programs']} compiles", file=sys.stderr)
+        f"{block['compile_programs']} compiles, {runner_builds} runner "
+        f"builds ({runner_rebuilds} on re-replay)", file=sys.stderr)
     return block
 
 

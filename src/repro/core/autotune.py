@@ -11,16 +11,20 @@ reused:
 * :func:`program_key` — content-derived key for a compiled trace (geometry,
   cycle count, op stats, segment shape). Recompiling the same plan yields
   the same key, so tunings survive plan-cache eviction and process restarts.
-* :func:`batch_bucket` — power-of-two batch buckets; one tuning entry
-  covers a bucket, mirroring the serving layer's shape buckets.
+* :func:`batch_bucket` — packed-word buckets ``ceil(B/32)``: under the
+  canonical uint32 layout every batch with the same word count replays
+  through identical executor shapes, so the word count IS the performance
+  class (the old pow2 buckets keyed one entry per batch size family even
+  when the execution was identical).
 * :class:`TuningTable` — a small on-disk JSON table mapping
   ``(program key, batch bucket, device topology) -> (backend, max_batch,
   us)``.  The topology axis (the ``tiles``-mesh device count, 1 when
   unsharded) keeps 1-device measurements from deciding 8-device sharded
-  executes; schema-1 tables (no topology) load as topo-1 *heuristic*
-  entries — usable hints, never authoritative measurements.  Corrupt or
-  unknown-schema files never fail an execute: they load as empty and the
-  conservative :func:`heuristic` takes over.
+  executes; schema-1/-2 tables (pre-word-bucket) load with their buckets
+  re-derived as word counts and demoted to *heuristic* entries — usable
+  hints, never authoritative measurements.  Corrupt or unknown-schema
+  files never fail an execute: they load as empty and the conservative
+  :func:`heuristic` takes over.
 * :func:`resolve_auto` — what ``engine.execute(backend="auto")`` calls:
   measured entry if present and runnable, heuristic otherwise.
 * :func:`autotune_execute` — time the real candidate variants on a real
@@ -30,9 +34,9 @@ reused:
   first occurrence of a ``(program, bucket)`` pair in a stream.
 
 Span-chunking rides in as a candidate dimension: ``max_batch=32`` splits a
-wide batch into one-machine-word chunks (uint32 planes instead of uint64),
-which trades word width for cache locality and is occasionally the fastest
-shape — the tuner measures it instead of guessing.
+wide batch into single-canonical-word chunks (W=1 per executor call), which
+trades per-call W-axis breadth for cache locality and is occasionally the
+fastest shape — the tuner measures it instead of guessing.
 """
 from __future__ import annotations
 
@@ -47,23 +51,28 @@ from typing import Dict, List, Optional, Tuple
 from ..obs import metrics as _metrics
 from ..obs.trace import span as _span
 
-SCHEMA = 2  # v2 adds the device-topology key component ("key|bucket|topo")
+# v2 added the device-topology key component ("key|bucket|topo"); v3 keys
+# buckets by canonical word count (ceil(B/32)) instead of pow2 batch width
+SCHEMA = 3
 
 # env var naming the on-disk tunings table; unset -> in-process table only
 TUNINGS_ENV = "MATPIM_TUNINGS"
 
-# one machine word on the jax path / half a word on numpy: the span-chunking
+# one canonical packed word (engine.WORD_BITS crossbars): the span-chunking
 # candidate splits wide batches into chunks of this many crossbars
 CHUNK_BATCH = 32
 
 
 def batch_bucket(B: int) -> int:
-    """Power-of-two bucket for a batch width (min 1).
+    """Packed-word bucket ``ceil(B/32)`` for a batch width (min 1).
+
+    Batches with the same canonical word count execute through identical
+    shapes on every backend, so they share one tuning entry.
 
     >>> batch_bucket(1), batch_bucket(32), batch_bucket(33), batch_bucket(128)
-    (1, 32, 64, 128)
+    (1, 1, 2, 4)
     """
-    return 1 << max(0, int(B) - 1).bit_length() if B > 1 else 1
+    return max(1, -(-int(B) // 32))
 
 
 def program_key(cp) -> str:
@@ -101,10 +110,12 @@ class TuningTable:
     Loading is lazy and forgiving: an unreadable / corrupt / unknown-schema
     file records a ``load_error`` and yields an empty table —
     ``backend="auto"`` then falls back to the heuristic instead of failing
-    the execute. Schema-1 files (pre-topology) load, but demoted to topo-1
-    ``source="heuristic"`` entries: their walls were measured before the
-    topology axis existed, so they may seed choices, not assert them.
-    ``save()`` writes atomically (tmp + rename) and creates parent
+    the execute. Legacy files load demoted to ``source="heuristic"``:
+    schema-1 (pre-topology) entries as topo-1, and both schema-1 and -2
+    with their pow2 batch buckets re-derived as canonical word buckets
+    (``batch_bucket``; the fastest entry wins when several legacy buckets
+    collapse onto one word count) — they may seed choices, not assert
+    them. ``save()`` writes atomically (tmp + rename) and creates parent
     directories.
     """
 
@@ -124,8 +135,8 @@ class TuningTable:
         try:
             d = json.loads(self.path.read_text())
             schema = d.get("schema")
-            if schema not in (1, SCHEMA):
-                raise ValueError(f"schema {schema} not in (1, {SCHEMA})")
+            if schema not in (1, 2, SCHEMA):
+                raise ValueError(f"schema {schema} not in (1, 2, {SCHEMA})")
             for k, e in d["entries"].items():
                 if schema == 1:
                     key, bucket = k.rsplit("|", 1)
@@ -133,12 +144,19 @@ class TuningTable:
                 else:
                     key, bucket, topo = k.rsplit("|", 2)
                     source = str(e.get("source", "measured"))
+                bucket, topo = int(bucket), int(topo)
+                if schema < SCHEMA:
+                    # legacy pow2 batch bucket -> canonical word bucket;
+                    # measured walls predate the layout, so demote
+                    bucket, source = batch_bucket(bucket), "heuristic"
                 entry = TuningEntry(
                     backend=str(e["backend"]), us=float(e["us"]),
                     max_batch=e.get("max_batch"), source=source)
                 if entry.max_batch is not None:
                     entry.max_batch = int(entry.max_batch)
-                self._entries[(key, int(bucket), int(topo))] = entry
+                cur = self._entries.get((key, bucket, topo))
+                if cur is None or entry.us < cur.us:  # fastest survivor
+                    self._entries[(key, bucket, topo)] = entry
         except Exception as exc:  # corrupt/stale table is never fatal
             self.load_error = f"{type(exc).__name__}: {exc}"
             self._entries = {}

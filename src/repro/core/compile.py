@@ -48,6 +48,7 @@ always equals the unfused trace length, and final memory is bit-identical
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -111,11 +112,26 @@ class _MaskPool:
 
 
 # ceiling on memoized executor artifacts per CompiledProgram (replay plans
-# and jitted runners; keys span (kind, word dtype, fault path)). The working
-# set of a steady-state caller is 1-4 entries; the bound exists so a
-# long-lived service touching many word dtypes / fault paths cannot retain
-# one jitted executable per key forever.
+# and jitted runners). Under the canonical packed layout the keys no longer
+# span word dtypes — one runner per (kind, fault path) — so a steady-state
+# caller's working set is 1-4 entries; the bound exists so a long-lived
+# service touching many fault paths cannot retain one jitted executable per
+# key forever.
 CACHE_MAX_ENTRIES = 8
+
+# aggregate live-entry counts per metrics namespace, across every
+# RunnerCache instance that reports under it (one cache per CompiledProgram
+# but ONE "engine.runner_cache.size" gauge) — guarded because executor
+# memoization happens on service worker threads
+_cache_sizes_lock = threading.Lock()
+_cache_sizes: Dict[str, int] = {}
+
+
+def _cache_size_adjust(name: str, delta: int) -> None:
+    with _cache_sizes_lock:
+        size = _cache_sizes.get(name, 0) + delta
+        _cache_sizes[name] = size
+    _metrics.gauge(f"{name}.size").set(size)
 
 
 class RunnerCache:
@@ -131,13 +147,28 @@ class RunnerCache:
     ``on_evict(value)`` fires for every LRU eviction (not for ``pop`` or
     ``clear``) — the service layer reuses this class for its plan cache and
     releases the evicted plan's executor caches there.
+
+    ``metrics`` names a ``repro.obs`` namespace to report under (e.g.
+    ``"engine.runner_cache"``): ``<name>.builds[.<kind>]`` counts fresh-key
+    inserts (kind = the key's leading tag, so ``builds.jax_fused`` counts
+    jitted fused runner builds), ``<name>.evictions`` LRU evictions, and the
+    ``<name>.size`` gauge tracks live entries aggregated across every cache
+    in the namespace — the observable form of the O(programs) claim.
     """
 
-    def __init__(self, max_entries: int = CACHE_MAX_ENTRIES, on_evict=None):
+    def __init__(self, max_entries: int = CACHE_MAX_ENTRIES, on_evict=None,
+                 metrics: Optional[str] = None):
         self.max_entries = int(max_entries)
         self.evictions = 0
+        self.builds = 0
+        self._metrics_name = metrics
         self._on_evict = on_evict
         self._d: "OrderedDict[object, object]" = OrderedDict()
+
+    @staticmethod
+    def _kind(key) -> str:
+        k = key[0] if isinstance(key, tuple) and key else key
+        return str(k)
 
     def get(self, key, default=None):
         if key not in self._d:
@@ -151,19 +182,40 @@ class RunnerCache:
         return self.get(key)
 
     def __setitem__(self, key, value) -> None:
+        fresh = key not in self._d
         self._d[key] = value
         self._d.move_to_end(key)
+        if fresh:
+            self.builds += 1
+            if self._metrics_name is not None:
+                _metrics.counter(f"{self._metrics_name}.builds").inc()
+                _metrics.counter(
+                    f"{self._metrics_name}.builds.{self._kind(key)}").inc()
+                _cache_size_adjust(self._metrics_name, 1)
         while len(self._d) > self.max_entries:
             _, old = self._d.popitem(last=False)
             self.evictions += 1
+            if self._metrics_name is not None:
+                _metrics.counter(f"{self._metrics_name}.evictions").inc()
+                _cache_size_adjust(self._metrics_name, -1)
             if self._on_evict is not None:
                 self._on_evict(old)
 
     def pop(self, key, default=None):
+        if key in self._d and self._metrics_name is not None:
+            _cache_size_adjust(self._metrics_name, -1)
         return self._d.pop(key, default)
 
     def clear(self) -> None:
+        if self._d and self._metrics_name is not None:
+            _cache_size_adjust(self._metrics_name, -len(self._d))
         self._d.clear()
+
+    def __del__(self):
+        try:
+            self.clear()
+        except Exception:    # pragma: no cover - interpreter shutdown
+            pass
 
     def __contains__(self, key) -> bool:
         return key in self._d
@@ -212,7 +264,9 @@ class CompiledProgram:
     schedule: Optional["FusedSchedule"] = None
 
     def __post_init__(self):
-        self._caches = RunnerCache()  # executor-private memoization (bounded)
+        # executor-private memoization (bounded LRU, observable through the
+        # engine.runner_cache.* metrics — one canonical runner per kind)
+        self._caches = RunnerCache(metrics="engine.runner_cache")
         # layout manifest for the pallas backend; algorithm plans attach one
         # at compile time (see plan.CrossbarPlan.compile / core.pallas_exec)
         self.pallas_spec = None
@@ -423,8 +477,17 @@ def fuse_program(cp: CompiledProgram) -> FusedSchedule:
 # ---------------------------------------------------------------------------
 
 # bumped whenever the CompiledProgram/FusedSchedule array layout changes;
-# the plan store embeds it so stale on-disk entries load as misses
-STATE_SCHEMA = 1
+# the plan store embeds it so stale on-disk entries load as misses.
+# Schema 2 records the executors' canonical packed-word layout (uint32,
+# leading W = ceil(B/32) data axis -> ONE batch-polymorphic runner per
+# program). The trace arrays themselves are layout-independent, so schema-1
+# entries remain loadable (see _ACCEPTED_SCHEMAS).
+STATE_SCHEMA = 2
+_ACCEPTED_SCHEMAS = (1, STATE_SCHEMA)
+
+# the layout manifest schema-2 entries embed; load-time validation rejects
+# an entry claiming a different word width than the executors use
+_WORD_LAYOUT = "uint32xW"
 
 # the trace arrays a CompiledProgram is made of, in dataclass order
 _CP_ARRAY_FIELDS = ("mode", "nops", "gate", "dst", "ins", "sel",
@@ -537,6 +600,7 @@ def compiled_state(cp: CompiledProgram) -> Tuple[dict, Dict[str, np.ndarray]]:
     """
     meta = {
         "state_schema": STATE_SCHEMA,
+        "word_layout": _WORD_LAYOUT,
         "rows": cp.rows, "cols": cp.cols, "n_cycles": cp.n_cycles,
         "W": cp.W, "I": cp.I,
         "stats": {k: int(v) for k, v in cp.stats.items()},
@@ -556,9 +620,13 @@ def compiled_from_state(meta: dict,
     hand-edited blob raises ``ValueError`` instead of constructing a trace
     the executors would misreplay.
     """
-    if meta.get("state_schema") != STATE_SCHEMA:
+    if meta.get("state_schema") not in _ACCEPTED_SCHEMAS:
         raise ValueError(f"compiled-state schema {meta.get('state_schema')!r}"
-                         f" != {STATE_SCHEMA}")
+                         f" not in {_ACCEPTED_SCHEMAS}")
+    if meta.get("state_schema") != 1 \
+            and meta.get("word_layout") != _WORD_LAYOUT:
+        raise ValueError(f"word layout {meta.get('word_layout')!r} "
+                         f"!= {_WORD_LAYOUT!r}")
     T, W, I = int(meta["n_cycles"]), int(meta["W"]), int(meta["I"])
     kw = {name: np.ascontiguousarray(arrays[name])
           for name in _CP_ARRAY_FIELDS}

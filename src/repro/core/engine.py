@@ -19,16 +19,26 @@ and an unfused (per-cycle) variant:
 trace carries a schedule) plus the explicit variants ``"numpy-fused"``,
 ``"numpy-unfused"``, ``"jax-fused"``, ``"jax-unfused"``.
 
-Bit-plane packing
------------------
-Memory is held transposed and bit-packed over the batch: ``buf[c, r]`` is one
-machine word whose bit b is cell (r, c) of crossbar b. Every FELIX gate is a
-short boolean expression on words (``BIT_GATES``), so one gather + a couple of
-bitwise ops simulate the gate across up to 64 crossbars at once — this is
-where the >=10x over the interpreter comes from, and what makes the tiled
-multi-crossbar scale-out (``tiling.py``) cheap. Batches wider than the word
-are chunked transparently; the jax word dtype shrinks to fit the batch
-(uint8 for B<=8), quartering single-instance simulation traffic.
+Canonical packed-word layout
+----------------------------
+Memory is held transposed and bit-packed over the batch in ONE canonical
+layout shared by every executor: a ``(W, cols+1, rows+1)`` uint32 buffer
+with ``W = word_count(B) = ceil(B / 32)`` as a leading data axis —
+``buf[w, c, r]`` is one 32-bit word whose bit b is cell (r, c) of crossbar
+``32*w + b``. Every FELIX gate is a short boolean expression on words
+(``BIT_GATES``), so one gather + a couple of bitwise ops simulate the gate
+across 32 crossbars at once — this is where the >=10x over the interpreter
+comes from, and what makes the tiled multi-crossbar scale-out
+(``tiling.py``) cheap.
+
+The word width never tracks the batch: the numpy executors broadcast over
+the leading W axis, and the jitted jax bodies stay per-word ``(C+1, R+1)``
+with a host-side loop over words — so every batch size shares the SAME
+jitted runner (one XLA compile per program, keyed dtype-free on
+``cp._caches``), instead of one runner per batch-derived word dtype.
+The only transparent chunking left is ``FaultModel`` sampling, which keeps
+the historic chunk sizes (64 on numpy, 32 on jax) so same-seed Monte-Carlo
+draws stay bit-identical across releases.
 
 All backends are bit-identical to the interpreter (``Crossbar.run``) in
 final memory state, cycle count, and op-category stats — property-tested in
@@ -154,55 +164,85 @@ class EngineResult:
 
 
 # ---------------------------------------------------------------------------
-# Bit-plane pack / unpack
+# Canonical bit-plane pack / unpack: (W, C+1, R+1) uint32 words
 # ---------------------------------------------------------------------------
 
+# bits per packed word — THE word width of the canonical layout. Every
+# executor (numpy, jax, mesh, pallas operand packing) shares it; batches
+# wider than one word grow the leading W axis instead of the word dtype.
+WORD_BITS = 32
 
-def _word_dtype(B: int):
-    for dt in (np.uint8, np.uint16, np.uint32, np.uint64):
-        if B <= np.dtype(dt).itemsize * 8:
-            return dt
-    raise ValueError(f"batch {B} exceeds 64 crossbars per word")
+# legacy alias (the constant predates the canonical layout; importers treat
+# it as "the jax chunk width", which is still the word width)
+JAX_WORD_BITS = WORD_BITS
+
+
+def word_count(B: int) -> int:
+    """Packed words covering a batch of ``B`` crossbars: ``ceil(B / 32)``.
+
+    >>> word_count(1), word_count(32), word_count(33), word_count(128)
+    (1, 1, 2, 4)
+    """
+    if B < 1:
+        raise ValueError(f"batch must be positive, got {B}")
+    return -(-int(B) // WORD_BITS)
 
 
 _LITTLE = __import__("sys").byteorder == "little"
 
 
-def _pack(mem: np.ndarray, dtype) -> np.ndarray:
-    """(B, R, C) uint8 -> (C+1, R+1) words, bit b = crossbar b.
+def _pack_word(mem: np.ndarray) -> np.ndarray:
+    """(B <= 32, R, C) uint8 -> (C+1, R+1) uint32, bit b = crossbar b.
 
     Byte-plane construction: bits are OR-accumulated into uint8 planes (one
-    per word byte) and the planes reinterpreted as the word dtype, so the
-    only wide operation is a single word-matrix transpose at the end. At
-    B == 1 the word simply *is* the cell value. This keeps host-side packing
-    far below trace-replay cost (the generic ``np.packbits(axis=0)`` path it
-    replaces dominated whole-engine wall time at large batches).
+    per word byte) and the planes reinterpreted as uint32, so the only wide
+    operation is a single word-matrix transpose at the end. At B == 1 the
+    word simply *is* the cell value. This keeps host-side packing far below
+    trace-replay cost (the generic ``np.packbits(axis=0)`` path it replaces
+    dominated whole-engine wall time at large batches).
     """
     B, R, C = mem.shape
-    dtype = np.dtype(dtype)
-    buf = np.zeros((C + 1, R + 1), dtype=dtype)
+    buf = np.zeros((C + 1, R + 1), dtype=np.uint32)
     if B == 1:
         buf[:C, :R] = mem[0].T
         return buf
     if not _LITTLE:                                   # pragma: no cover
         pb = np.packbits(mem, axis=0, bitorder="little")
-        word = pb[0].astype(dtype)
+        word = pb[0].astype(np.uint32)
         for g in range(1, pb.shape[0]):
-            word |= pb[g].astype(dtype) << dtype(8 * g)
+            word |= pb[g].astype(np.uint32) << np.uint32(8 * g)
         buf[:C, :R] = word.T
         return buf
-    planes = np.zeros((R, C, dtype.itemsize), np.uint8)
+    planes = np.zeros((R, C, 4), np.uint8)
     for g in range((B + 7) // 8):
         p = planes[:, :, g]
         for k in range(min(8, B - 8 * g)):
             p |= mem[8 * g + k] << np.uint8(k)
-    word = planes.reshape(R, C * dtype.itemsize).view(dtype)  # (R, C)
+    word = planes.reshape(R, C * 4).view(np.uint32)   # (R, C)
     buf[:C, :R] = word.T
     return buf
 
 
-def _unpack(buf: np.ndarray, B: int, R: int, C: int) -> np.ndarray:
-    """Inverse of :func:`_pack`: (C+1, R+1) words -> (B, R, C) uint8.
+def _pack(mem: np.ndarray) -> np.ndarray:
+    """(B, R, C) uint8 -> canonical (W, C+1, R+1) uint32 packed buffer.
+
+    ``W = word_count(B)``; word ``w`` packs crossbars ``[32w, 32w+32)`` with
+    unused high bits of the last word zero. This is the ONE layout every
+    executor replays — the numpy paths broadcast over the leading axis, the
+    jax runners loop it host-side around a per-word jitted body.
+    """
+    B = mem.shape[0]
+    W = word_count(B)
+    if W == 1:
+        return _pack_word(mem)[None]
+    buf = np.empty((W, mem.shape[2] + 1, mem.shape[1] + 1), np.uint32)
+    for w in range(W):
+        buf[w] = _pack_word(mem[WORD_BITS * w:WORD_BITS * (w + 1)])
+    return buf
+
+
+def _unpack_word(buf: np.ndarray, B: int, R: int, C: int) -> np.ndarray:
+    """Inverse of :func:`_pack_word`: (C+1, R+1) uint32 -> (B, R, C) uint8.
 
     One word-matrix transpose up front, then contiguous per-bit shifts out
     of uint8 byte planes (no ``np.unpackbits`` round-trip through an
@@ -210,18 +250,31 @@ def _unpack(buf: np.ndarray, B: int, R: int, C: int) -> np.ndarray:
     """
     if B == 1:
         return np.ascontiguousarray(
-            (buf[:C, :R] & buf.dtype.type(1)).astype(np.uint8).T)[None]
+            (buf[:C, :R] & np.uint32(1)).astype(np.uint8).T)[None]
     wT = np.ascontiguousarray(buf[:C, :R].T)          # (R, C) words
     out = np.empty((B, R, C), dtype=np.uint8)
     if not _LITTLE:                                   # pragma: no cover
         for b in range(B):
-            out[b] = (wT >> buf.dtype.type(b)).astype(np.uint8) & 1
+            out[b] = (wT >> np.uint32(b)).astype(np.uint8) & 1
         return out
-    u8 = wT.view(np.uint8).reshape(R, C, buf.dtype.itemsize)
+    u8 = wT.view(np.uint8).reshape(R, C, 4)
     for g in range((B + 7) // 8):
         plane = np.ascontiguousarray(u8[:, :, g])
         for k in range(min(8, B - 8 * g)):
             out[8 * g + k] = (plane >> np.uint8(k)) & np.uint8(1)
+    return out
+
+
+def _unpack(buf: np.ndarray, B: int, R: int, C: int) -> np.ndarray:
+    """Inverse of :func:`_pack`: (W, C+1, R+1) uint32 -> (B, R, C) uint8."""
+    W = buf.shape[0]
+    if W == 1:
+        return _unpack_word(buf[0], B, R, C)
+    out = np.empty((B, R, C), dtype=np.uint8)
+    for w in range(W):
+        lo = WORD_BITS * w
+        bw = min(WORD_BITS, B - lo)
+        out[lo:lo + bw] = _unpack_word(buf[w], bw, R, C)
     return out
 
 
@@ -285,37 +338,37 @@ def _run_numpy(cp: CompiledProgram, mem: np.ndarray,
     if faults is not None:
         return _run_numpy_faulty(cp, mem, faults, rng)
     B = mem.shape[0]
-    dtype = _word_dtype(B)
-    ones = dtype(np.iinfo(dtype).max)
+    ones = np.uint32(0xFFFFFFFF)
     R, C = cp.rows, cp.cols
-    buf = _pack(mem, dtype)                      # (C1, R1) words
+    buf = _pack(mem)                             # (W, C1, R1) words
     rmasks, cmasks = cp.row_masks, cp.col_masks
     plan = _numpy_plan(cp)
 
     for mode, groups, inits in plan:
         if mode == MODE_COL:
             for gid, arity, d, ik, s, full, t, w in groups:
-                g = buf[ik]                      # (n, arity, R1)
-                out = BIT_GATES[gid][1](*(g[:, k] for k in range(arity)))
+                g = buf[:, ik]                   # (W, n, arity, R1)
+                out = BIT_GATES[gid][1](*(g[:, :, k] for k in range(arity)))
                 if full:
                     # write the data rows only; the extra (const-0) row at
                     # index R must stay zero
-                    buf[d, :R] = out[:, :R]
+                    buf[:, d, :R] = out[..., :R]
                 else:
-                    m = rmasks[s]                # (n, R1)
-                    buf[d] = np.where(m, out, buf[d])
+                    m = rmasks[s]                # (n, R1), broadcasts over W
+                    buf[:, d] = np.where(m, out, buf[:, d])
         elif mode == MODE_ROW:
             for gid, arity, d, ik, s, full, t, w in groups:
-                g = buf[:, ik]                   # (C1, n, arity)
-                out = BIT_GATES[gid][1](*(g[:, :, k] for k in range(arity)))
+                g = buf[:, :, ik]                # (W, C1, n, arity)
+                out = BIT_GATES[gid][1](*(g[..., k] for k in range(arity)))
                 if full:
-                    buf[:C, d] = out[:C]
+                    buf[:, :C, d] = out[:, :C]
                 else:
-                    m = cmasks[s].T              # (C1, n)
-                    buf[:, d] = np.where(m, out, buf[:, d])
+                    m = cmasks[s].T              # (C1, n), broadcasts over W
+                    buf[:, :, d] = np.where(m, out, buf[:, :, d])
         else:
             for c_idx, r_idx, v, t, i in inits:
-                buf[np.ix_(c_idx, r_idx)] = ones if v else dtype(0)
+                rect = (slice(None),) + np.ix_(c_idx, r_idx)
+                buf[rect] = ones if v else np.uint32(0)
     return _unpack(buf, B, cp.rows, cp.cols)
 
 
@@ -336,41 +389,40 @@ def _run_numpy_faulty(cp: CompiledProgram, mem: np.ndarray,
     fault-free path (property-tested).
     """
     B = mem.shape[0]
-    dtype = _word_dtype(B)
-    ones = dtype(np.iinfo(dtype).max)
+    ones = np.uint32(0xFFFFFFFF)
     R, C = cp.rows, cp.cols
-    src = make_fault_source(faults, rng, B, R, C, dtype)
-    sa0, sa1 = src.stuck()
-    buf = _pack(mem, dtype)
+    src = make_fault_source(faults, rng, B, R, C)
+    sa0, sa1 = src.stuck()                       # (W, C1, R1) each
+    buf = _pack(mem)
     buf = (buf | sa1) & ~sa0                     # cells are stuck from t=0
     rmasks, cmasks = cp.row_masks, cp.col_masks
 
     for mode, groups, inits in _numpy_plan(cp):
         if mode == MODE_COL:
             for gid, arity, d, ik, s, full, t, w in groups:
-                g = buf[ik]                      # (n, arity, R1)
-                out = BIT_GATES[gid][1](*(g[:, k] for k in range(arity)))
-                old = buf[d]
-                new = np.where(rmasks[s], out, old)
-                if src.has_switch:
-                    fail = src.switch_col(t, w, len(d))
-                    new = (old & fail) | (new & ~fail)
-                buf[d] = (new | sa1[d]) & ~sa0[d]
-        elif mode == MODE_ROW:
-            for gid, arity, d, ik, s, full, t, w in groups:
-                g = buf[:, ik]                   # (C1, n, arity)
+                g = buf[:, ik]                   # (W, n, arity, R1)
                 out = BIT_GATES[gid][1](*(g[:, :, k] for k in range(arity)))
                 old = buf[:, d]
-                new = np.where(cmasks[s].T, out, old)
+                new = np.where(rmasks[s], out, old)
                 if src.has_switch:
-                    fail = src.switch_row(t, w, len(d))
+                    fail = src.switch_col(t, w, len(d))   # (W, n, R1)
                     new = (old & fail) | (new & ~fail)
                 buf[:, d] = (new | sa1[:, d]) & ~sa0[:, d]
+        elif mode == MODE_ROW:
+            for gid, arity, d, ik, s, full, t, w in groups:
+                g = buf[:, :, ik]                # (W, C1, n, arity)
+                out = BIT_GATES[gid][1](*(g[..., k] for k in range(arity)))
+                old = buf[:, :, d]
+                new = np.where(cmasks[s].T, out, old)
+                if src.has_switch:
+                    fail = src.switch_row(t, w, len(d))   # (W, C1, n)
+                    new = (old & fail) | (new & ~fail)
+                buf[:, :, d] = (new | sa1[:, :, d]) & ~sa0[:, :, d]
         else:
             for c_idx, r_idx, v, t, i in inits:
-                rect = np.ix_(c_idx, r_idx)
-                blk = np.full((len(c_idx), len(r_idx)),
-                              ones if v else dtype(0), dtype=dtype)
+                rect = (slice(None),) + np.ix_(c_idx, r_idx)
+                blk = np.full((buf.shape[0], len(c_idx), len(r_idx)),
+                              ones if v else np.uint32(0), dtype=np.uint32)
                 flip = src.init_flip(t, i, c_idx, r_idx)
                 if flip is not None:
                     blk ^= flip
@@ -382,18 +434,17 @@ def _run_numpy_faulty(cp: CompiledProgram, mem: np.ndarray,
 # JAX executor (lax.scan over the packed trace, uint32 bit-planes)
 # ---------------------------------------------------------------------------
 
-JAX_WORD_BITS = 32
 
-
-def _build_jax_body(cp: CompiledProgram, np_dtype=np.uint32):
+def _build_jax_body(cp: CompiledProgram):
     """Un-jitted unfused per-cycle scan ``body(buf) -> buf`` over one packed
-    ``(C+1, R+1)`` word buffer (see :func:`jax_unfused_body`)."""
+    ``(C+1, R+1)`` uint32 word of the canonical buffer (see
+    :func:`jax_unfused_body`); the runner loops words host-side."""
     import jax.numpy as jnp
     from jax import lax
 
     R1, C1, W = cp.rows + 1, cp.cols + 1, cp.W
-    dt = jnp.dtype(np_dtype)
-    ones = dt.type(np.iinfo(np_dtype).max)
+    dt = jnp.dtype(np.uint32)
+    ones = dt.type(0xFFFFFFFF)
     row_masks = jnp.asarray(cp.row_masks)
     col_masks = jnp.asarray(cp.col_masks)
     xs = {
@@ -450,13 +501,14 @@ def _build_jax_body(cp: CompiledProgram, np_dtype=np.uint32):
     return body
 
 
-def jax_unfused_body(cp: CompiledProgram, np_dtype=np.uint32):
-    """Un-jitted unfused transition, memoized per (program, dtype) — the
-    seam ``repro.distributed.mesh_exec`` vmaps inside ``shard_map``."""
-    key = ("jax_unfused_body", np.dtype(np_dtype).name)
+def jax_unfused_body(cp: CompiledProgram):
+    """Un-jitted unfused per-word transition, memoized dtype-free on
+    ``cp._caches`` — the seam ``repro.distributed.mesh_exec`` vmaps inside
+    ``shard_map``."""
+    key = ("jax_unfused_body",)
     body = cp._caches.get(key)
     if body is None:
-        body = cp._caches[key] = _build_jax_body(cp, np_dtype)
+        body = cp._caches[key] = _build_jax_body(cp)
     return body
 
 
@@ -464,12 +516,12 @@ def _build_jax_runner(cp: CompiledProgram):
     import jax
     import jax.numpy as jnp
 
-    run = jax.jit(jax_unfused_body(cp, np.uint32))
+    run = jax.jit(jax_unfused_body(cp))
 
     def runner(mem_np: np.ndarray) -> np.ndarray:
         B = mem_np.shape[0]
-        buf = _pack(mem_np, np.uint32)
-        out = np.asarray(run(jnp.asarray(buf)))
+        bufs = _pack(mem_np)                       # (W, C1, R1)
+        out = np.stack([np.asarray(run(jnp.asarray(b))) for b in bufs])
         return _unpack(out, B, cp.rows, cp.cols)
 
     return runner
@@ -503,11 +555,11 @@ def _build_jax_runner_faulty(cp: CompiledProgram):
         "init_v": jnp.asarray(cp.init_v),
     }
     iota_w = jnp.arange(W)
-    bit_w = jnp.arange(JAX_WORD_BITS, dtype=dt)
+    bit_w = jnp.arange(WORD_BITS, dtype=dt)
 
     def bern(key, p, shape):
         # words of Bernoulli(p) bits, one realization per bit-plane slot
-        bits = (jax.random.uniform(key, shape + (JAX_WORD_BITS,)) < p)
+        bits = (jax.random.uniform(key, shape + (WORD_BITS,)) < p)
         return jnp.sum(bits.astype(dt) << bit_w, axis=-1, dtype=dt)
 
     def gate_select(gate_ids, args):
@@ -567,16 +619,18 @@ def _build_jax_runner_faulty(cp: CompiledProgram):
 
     def runner(mem_np: np.ndarray, faults: FaultModel,
                rng: np.random.Generator) -> np.ndarray:
+        # _execute_impl chunks FaultModel batches at WORD_BITS, so the
+        # canonical pack is always a single word here
         B = mem_np.shape[0]
-        sa0, sa1 = sample_stuck_words(faults, B, cp.rows, cp.cols, rng,
-                                      np.uint32)
-        buf = _pack(mem_np, np.uint32)
+        sa0, sa1 = sample_stuck_words(faults, B, cp.rows, cp.cols, rng)
+        sa0, sa1 = sa0[0], sa1[0]
+        buf = _pack(mem_np)[0]
         buf = (buf | sa1) & ~sa0                 # cells are stuck from t=0
         key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
         out = np.asarray(run(jnp.asarray(buf), key, jnp.asarray(sa0),
                              jnp.asarray(sa1), jnp.float32(faults.p_switch),
                              jnp.float32(faults.p_init)))
-        return _unpack(out, B, cp.rows, cp.cols)
+        return _unpack(out[None], B, cp.rows, cp.cols)
 
     return runner
 
@@ -634,10 +688,13 @@ def execute(
     chunking suffix stripped (e.g. ``auto:jax-fused``).
 
     ``mem`` is ``(B, rows, cols)`` (or ``(rows, cols)`` for B=1) uint8 initial
-    state; the input is not mutated. Batches wider than one machine word (64
-    for numpy, 32 for jax) — or than ``max_batch`` — are chunked; every chunk
-    runs the identical program, so the reported cycle count (the *parallel*
-    latency of B independent arrays) is unchanged.
+    state; the input is not mutated. Any batch packs into the canonical
+    ``(W, cols+1, rows+1)`` uint32 layout (``W = ceil(B/32)``) and runs in
+    one executor call; only ``max_batch`` (span chunking from the autotuner)
+    and ``FaultModel`` runs — which keep the historic chunk widths (64 numpy
+    / 32 jax) so same-seed Monte-Carlo draws stay bit-identical — split the
+    batch. Every chunk runs the identical program, so the reported cycle
+    count (the *parallel* latency of B independent arrays) is unchanged.
 
     ``backend`` selects the executor: ``"numpy"``/``"jax"`` use the fused
     macro-op schedule when ``cp`` carries one (the compile default) and fall
@@ -750,9 +807,15 @@ def _execute_impl(
         label = f"pallas:fallback-{base}"
     if base == "jax" and not have_jax():
         raise RuntimeError("jax backend requested but jax is not installed")
-    word = 64 if base == "numpy" else JAX_WORD_BITS
     B = mem.shape[0]
-    step = min(word, B) if not max_batch else min(word, max(1, int(max_batch)))
+    if isinstance(faults, FaultModel):
+        # FaultModel sampling is chunk-order-dependent: preserve the historic
+        # chunk widths so same-seed Monte-Carlo draws stay bit-identical
+        step = min(64 if base == "numpy" else WORD_BITS, B)
+    else:
+        step = B
+    if max_batch:
+        step = min(step, max(1, int(max_batch)))
 
     if variant == "auto":
         if isinstance(faults, FaultRealization):
@@ -793,7 +856,6 @@ def _execute_impl(
                                 backend=f"{label}+mesh{D}", faults=faults)
 
     rng = as_rng(rng) if isinstance(faults, FaultModel) else None
-    jax_dtype = _word_dtype(step) if base == "jax" else None
     chunks = []
     for i in range(0, B, step):
         sub = mem[i : i + step]
@@ -804,9 +866,9 @@ def _execute_impl(
             chunks.append(run(cp, sub, f, rng) if f is not None
                           else run(cp, sub))
         elif variant == "fused":
-            chunks.append(build_jax_fused_real(cp, jax_dtype)(sub, f)
+            chunks.append(build_jax_fused_real(cp)(sub, f)
                           if f is not None
-                          else build_jax_fused(cp, jax_dtype)(sub))
+                          else build_jax_fused(cp)(sub))
         else:
             chunks.append(_run_jax(cp, sub, f, rng) if f is not None
                           else _run_jax(cp, sub))

@@ -8,9 +8,12 @@ segment schedule attached at compile time — onto the two vectorized backends:
   gate-eval / masked-scatter per gate group per span instead of a Python
   loop per cycle — and skips the trace-global op padding entirely (segments
   carry their own, usually much narrower, width).
-* **jax-fused** (:func:`build_jax_fused`): one jitted function per
-  (program, word dtype) with **no per-cycle ``lax.switch`` and no
-  cycle-granular scan carry**. Init segments lower to compile-time-constant
+* **jax-fused** (:func:`build_jax_fused`): ONE jitted function per program —
+  batch-polymorphic over the canonical packed layout (the host loops the
+  leading ``W = ceil(B/32)`` word axis around a per-word uint32 body, so
+  every batch size replays through the same XLA executable) — with **no
+  per-cycle ``lax.switch`` and no cycle-granular scan carry**. Init segments
+  lower to compile-time-constant
   ``jnp.where`` rectangles; short gate segments unroll to straight-line code
   with static indices; long gate segments become a mode-specialized
   ``lax.scan`` over fixed-size chunks of ``CHUNK`` cycles, so the carry
@@ -170,21 +173,22 @@ def _numpy_fused_plan(cp: CompiledProgram) -> list:
 
 def run_numpy_fused(cp: CompiledProgram, mem: np.ndarray,
                     faults=None, rng=None) -> np.ndarray:
-    """Fused numpy replay of ``cp`` over packed batch ``mem`` (B, R, C).
+    """Fused numpy replay of ``cp`` over batch ``mem`` (B, R, C).
 
+    Runs on the canonical packed buffer — uint32 words with a leading
+    ``W = ceil(B/32)`` axis that every array expression broadcasts over.
     Bit-identical to the per-cycle numpy executor (and the interpreter) in
     all cases; under a ``FaultModel`` it also consumes the numpy RNG in the
     exact per-(cycle, gate-group) order of the unfused path, so faulty runs
     match bit-for-bit given the same seed.
     """
-    from .engine import BIT_GATES, _pack, _unpack, _word_dtype
+    from .engine import BIT_GATES, _pack, _unpack
     from ..device.faults import make_fault_source
     B = mem.shape[0]
-    dtype = _word_dtype(B)
-    ones = dtype(np.iinfo(dtype).max)
+    ones = np.uint32(0xFFFFFFFF)
     R, C = cp.rows, cp.cols
-    src = make_fault_source(faults, rng, B, R, C, dtype)
-    buf = _pack(mem, dtype)
+    src = make_fault_source(faults, rng, B, R, C)
+    buf = _pack(mem)                                 # (W, C1, R1)
     if src is not None:
         sa0, sa1 = src.stuck()
         buf = (buf | sa1) & ~sa0
@@ -193,12 +197,13 @@ def run_numpy_fused(cp: CompiledProgram, mem: np.ndarray,
         if mode == MODE_INIT:
             for ents in items:
                 for c_idx, r_idx, v, t, i in ents:
-                    rect = np.ix_(c_idx, r_idx)
+                    rect = (slice(None),) + np.ix_(c_idx, r_idx)
                     if src is None:
-                        buf[rect] = ones if v else dtype(0)
+                        buf[rect] = ones if v else np.uint32(0)
                     else:
-                        blk = np.full((len(c_idx), len(r_idx)),
-                                      ones if v else dtype(0), dtype=dtype)
+                        blk = np.full(
+                            (buf.shape[0], len(c_idx), len(r_idx)),
+                            ones if v else np.uint32(0), dtype=np.uint32)
                         flip = src.init_flip(t, i, c_idx, r_idx)
                         if flip is not None:
                             blk ^= flip
@@ -207,13 +212,14 @@ def run_numpy_fused(cp: CompiledProgram, mem: np.ndarray,
         for groups, blocks in items:
             if src is not None and src.has_switch:
                 fail = np.empty(
-                    (blocks[-1][3] if blocks else 0,
-                     (R if mode == MODE_COL else C) + 1), dtype=dtype)
+                    (buf.shape[0], blocks[-1][3] if blocks else 0,
+                     (R if mode == MODE_COL else C) + 1), dtype=np.uint32)
                 for t, gid, k0, k1, slots in blocks:
                     f = (src.switch_col(t, slots, k1 - k0)
                          if mode == MODE_COL
-                         else src.switch_row(t, slots, k1 - k0).T)
-                    fail[k0:k1] = f
+                         else src.switch_row(t, slots,
+                                             k1 - k0).transpose(0, 2, 1))
+                    fail[:, k0:k1] = f
             else:
                 fail = None
             # snapshot semantics: gather EVERY group's inputs against
@@ -223,41 +229,41 @@ def run_numpy_fused(cp: CompiledProgram, mem: np.ndarray,
             if mode == MODE_COL:
                 outs = []
                 for gid, arity, d, ik, s, m, full, kidx in groups:
-                    g = buf[ik]                      # (n, arity, R1)
-                    outs.append(
-                        BIT_GATES[gid][1](*(g[:, k] for k in range(arity))))
-                for (gid, arity, d, ik, s, m, full, kidx), out in zip(
-                        groups, outs):
-                    if src is None and full:
-                        buf[d, :R] = out[:, :R]
-                        continue
-                    old = buf[d]
-                    new = np.where(m, out, old)
-                    if fail is not None:
-                        fw = fail[kidx]
-                        new = (old & fw) | (new & ~fw)
-                    if src is not None:
-                        new = (new | sa1[d]) & ~sa0[d]
-                    buf[d] = new
-            else:
-                outs = []
-                for gid, arity, d, ik, s, m, full, kidx in groups:
-                    g = buf[:, ik]                   # (C1, n, arity)
+                    g = buf[:, ik]                   # (W, n, arity, R1)
                     outs.append(
                         BIT_GATES[gid][1](*(g[:, :, k] for k in range(arity))))
                 for (gid, arity, d, ik, s, m, full, kidx), out in zip(
                         groups, outs):
                     if src is None and full:
-                        buf[:C, d] = out[:C]
+                        buf[:, d, :R] = out[..., :R]
                         continue
                     old = buf[:, d]
-                    new = np.where(m.T, out, old)
+                    new = np.where(m, out, old)
                     if fail is not None:
-                        fw = fail[kidx].T            # (C1, n)
+                        fw = fail[:, kidx]
                         new = (old & fw) | (new & ~fw)
                     if src is not None:
                         new = (new | sa1[:, d]) & ~sa0[:, d]
                     buf[:, d] = new
+            else:
+                outs = []
+                for gid, arity, d, ik, s, m, full, kidx in groups:
+                    g = buf[:, :, ik]                # (W, C1, n, arity)
+                    outs.append(
+                        BIT_GATES[gid][1](*(g[..., k] for k in range(arity))))
+                for (gid, arity, d, ik, s, m, full, kidx), out in zip(
+                        groups, outs):
+                    if src is None and full:
+                        buf[:, :C, d] = out[:, :C]
+                        continue
+                    old = buf[:, :, d]
+                    new = np.where(m.T, out, old)
+                    if fail is not None:
+                        fw = fail[:, kidx].transpose(0, 2, 1)  # (W, C1, n)
+                        new = (old & fw) | (new & ~fw)
+                    if src is not None:
+                        new = (new | sa1[:, :, d]) & ~sa0[:, :, d]
+                    buf[:, :, d] = new
     return _unpack(buf, B, cp.rows, cp.cols)
 
 
@@ -271,27 +277,30 @@ def jax_fuse_eligible(cp: CompiledProgram) -> bool:
     return schedule_for(cp).n_segments <= JAX_FUSE_MAX_SEGMENTS
 
 
-def _build_jax_fused(cp: CompiledProgram, np_dtype,
+def _build_jax_fused(cp: CompiledProgram,
                      realization: bool = False, body_only: bool = False):
-    """Build the jitted fused runner for ``cp`` at word dtype ``np_dtype``.
+    """Build the canonical jitted fused runner for ``cp``.
 
-    Returns ``runner(mem)`` (ideal) or ``runner(mem, real)`` where ``real``
-    is a :class:`FaultRealization` packed to runtime arguments, so one jit
-    serves every realization of the same shape. ``body_only=True`` instead
-    returns the un-jitted ideal packed-buffer transition
-    ``body(buf) -> buf`` — the seam the mesh executor vmaps and shard_maps
+    The jitted body is a per-word uint32 transition on one ``(C+1, R+1)``
+    packed buffer; the returned runner loops the canonical ``W`` word axis
+    host-side, so ONE XLA executable serves every batch size. Returns
+    ``runner(mem)`` (ideal) or ``runner(mem, real)`` where ``real`` is a
+    :class:`FaultRealization` packed to runtime arguments, so one jit serves
+    every realization of the same shape. ``body_only=True`` instead returns
+    the un-jitted ideal packed-buffer transition ``body(buf) -> buf`` — the
+    seam the mesh executor vmaps and shard_maps
     (``repro.distributed.mesh_exec``).
     """
     import jax
     import jax.numpy as jnp
     from jax import lax
 
-    from .engine import BIT_GATES, _pack, _unpack
+    from .engine import BIT_GATES, WORD_BITS, _pack, _unpack
 
     sched = schedule_for(cp)
-    dt = jnp.dtype(np_dtype)
+    dt = jnp.dtype(np.uint32)
     R1, C1 = cp.rows + 1, cp.cols + 1
-    ones = dt.type(np.iinfo(np_dtype).max)
+    ones = dt.type(0xFFFFFFFF)
     row_masks, col_masks = cp.row_masks, cp.col_masks
     jrow_masks, jcol_masks = jnp.asarray(row_masks), jnp.asarray(col_masks)
 
@@ -481,8 +490,9 @@ def _build_jax_fused(cp: CompiledProgram, np_dtype,
 
         def runner(mem_np: np.ndarray) -> np.ndarray:
             B = mem_np.shape[0]
-            buf = _pack(mem_np, np_dtype)
-            out = np.asarray(run_ideal(jnp.asarray(buf)))
+            bufs = _pack(mem_np)                   # (W, C1, R1)
+            out = np.stack([np.asarray(run_ideal(jnp.asarray(b)))
+                            for b in bufs])
             return _unpack(out, B, cp.rows, cp.cols)
         return runner
 
@@ -494,70 +504,73 @@ def _build_jax_fused(cp: CompiledProgram, np_dtype,
         return buf
 
     def pack_realization(real: FaultRealization) -> tuple:
-        """Segment-indexed runtime arrays for ``real`` (masks sampled per
-        original cycle; sorted-slot permutation applied here, host-side)."""
-        sa = real.stuck_words(np_dtype)
+        """Segment-indexed runtime arrays for ONE canonical word of ``real``
+        (batch <= 32; masks sampled per original cycle; sorted-slot
+        permutation applied here, host-side)."""
+        sa = tuple(a[0] for a in real.stuck_words())
         rxs = []
         for seg in sched.segments:
             if seg.mode == MODE_INIT:
-                init = np.zeros((seg.length, cp.I, C1, R1), np_dtype)
+                init = np.zeros((seg.length, cp.I, C1, R1), np.uint32)
                 for j, t in enumerate(range(seg.t0, seg.t1)):
                     for i in range(cp.I):
-                        init[j, i] = real.init_words(t, i, np_dtype)
+                        init[j, i] = real.init_words(t, i)[0]
                 rxs.append({"init": jnp.asarray(init)})
                 continue
             line = R1 if seg.mode == MODE_COL else C1
-            sw = np.zeros((seg.length, seg.W, line), np_dtype)
+            sw = np.zeros((seg.length, seg.W, line), np.uint32)
             for j, t in enumerate(range(seg.t0, seg.t1)):
                 n = int(seg.nops[j])
                 if n:
-                    sw[j, :n] = real.switch_words(t, seg.perm[j, :n], line,
-                                                  np_dtype)
+                    sw[j, :n] = real.switch_words(t, seg.perm[j, :n],
+                                                  line)[0]
             if seg.length > INLINE_MAX:
                 pad = (-seg.length) % CHUNK
                 if pad:
                     sw = np.concatenate(
-                        [sw, np.zeros((pad, seg.W, line), np_dtype)])
+                        [sw, np.zeros((pad, seg.W, line), np.uint32)])
                 sw = sw.reshape(-1, CHUNK, seg.W, line)
             rxs.append({"switch": jnp.asarray(sw)})
-        return tuple(jnp.asarray(a) for a in sa), tuple(rxs)
+        return sa, tuple(rxs)
 
     def runner(mem_np: np.ndarray, real: FaultRealization) -> np.ndarray:
         B = mem_np.shape[0]
-        sa, rxs = pack_realization(real)
-        buf = _pack(mem_np, np_dtype)
-        buf = (buf | np.asarray(sa[1])) & ~np.asarray(sa[0])
-        out = np.asarray(run_real(jnp.asarray(buf), sa, rxs))
+        bufs = _pack(mem_np)                       # (W, C1, R1)
+        out = np.empty_like(bufs)
+        for w in range(bufs.shape[0]):
+            rw = real.narrow(WORD_BITS * w, min(WORD_BITS * (w + 1), B))
+            sa, rxs = pack_realization(rw)
+            buf = (bufs[w] | sa[1]) & ~sa[0]
+            out[w] = np.asarray(run_real(
+                jnp.asarray(buf), tuple(jnp.asarray(a) for a in sa), rxs))
         return _unpack(out, B, cp.rows, cp.cols)
     return runner
 
 
-def build_jax_fused(cp: CompiledProgram, np_dtype):
-    """Ideal fused runner, memoized per (program, dtype)."""
-    key = ("jax_fused", np.dtype(np_dtype).name)
+def build_jax_fused(cp: CompiledProgram):
+    """The canonical ideal fused runner, memoized per program."""
+    key = ("jax_fused",)
     runner = cp._caches.get(key)
     if runner is None:
-        runner = cp._caches[key] = _build_jax_fused(cp, np_dtype)
+        runner = cp._caches[key] = _build_jax_fused(cp)
     return runner
 
 
-def jax_fused_body(cp: CompiledProgram, np_dtype):
+def jax_fused_body(cp: CompiledProgram):
     """Un-jitted ideal fused transition ``body(buf) -> buf`` on one packed
-    ``(C+1, R+1)`` buffer, memoized per (program, dtype); the mesh executor
-    vmaps this over per-device chunk stacks inside ``shard_map``."""
-    key = ("jax_fused_body", np.dtype(np_dtype).name)
+    ``(C+1, R+1)`` uint32 word buffer, memoized per program; the mesh
+    executor vmaps this over per-device chunk stacks inside ``shard_map``."""
+    key = ("jax_fused_body",)
     body = cp._caches.get(key)
     if body is None:
-        body = cp._caches[key] = _build_jax_fused(cp, np_dtype,
-                                                  body_only=True)
+        body = cp._caches[key] = _build_jax_fused(cp, body_only=True)
     return body
 
 
-def build_jax_fused_real(cp: CompiledProgram, np_dtype):
-    """Realization-taking fused runner, memoized per (program, dtype)."""
-    key = ("jax_fused_real", np.dtype(np_dtype).name)
+def build_jax_fused_real(cp: CompiledProgram):
+    """Realization-taking canonical fused runner, memoized per program."""
+    key = ("jax_fused_real",)
     runner = cp._caches.get(key)
     if runner is None:
-        runner = cp._caches[key] = _build_jax_fused(cp, np_dtype,
-                                                    realization=True)
+        runner = cp._caches[key] = _build_jax_fused(cp, realization=True)
     return runner

@@ -145,7 +145,12 @@ def _pad_to(v: int, mult: int) -> int:
 
 def _pack_words(bits: np.ndarray) -> np.ndarray:
     """(…, n) {0,1} → (…, Kw) uint32, little-endian bit order, zero-padded
-    so ``Kw`` meets ``binary_matmul``'s block constraint (Kw ≤ 8 or 8|Kw)."""
+    so ``Kw`` meets ``binary_matmul``'s block constraint (Kw ≤ 8 or 8|Kw).
+
+    Same word convention as the engine's canonical packed layout
+    (``engine.WORD_BITS`` = 32, bit ``b`` of word ``w`` = element
+    ``32w + b``), just packed along the operand axis instead of the batch.
+    """
     n = bits.shape[-1]
     words = _pad_to(max(1, -(-n // 32)), 8) if n > 256 else -(-n // 32)
     pad = words * 32 - n

@@ -5,10 +5,10 @@ cells get fabricated (or worn) into permanent stuck-at states, stateful-logic
 gates fail to switch their output device with some per-event probability, and
 bulk SET/RESET pulses disturb a fraction of the cells they drive. This module
 defines those models and the *packed* sampling helpers the executors in
-``repro.core.engine`` use to inject them — faults live in the same bit-plane
-word representation as the memory itself, so one sampled word carries an
-independent fault realization for every crossbar in the batch (up to 64 per
-machine word on the numpy path, 32 on the jax path).
+``repro.core.engine`` use to inject them — faults live in the same canonical
+bit-plane word representation as the memory itself: uint32 words with a
+leading ``W = ceil(B/32)`` axis, bit ``b`` of word ``w`` carrying an
+independent fault realization for crossbar ``32w + b`` of the batch.
 
 Fault mechanisms (all independent, all per-crossbar-instance):
 
@@ -103,23 +103,28 @@ def as_rng(rng) -> np.random.Generator:
 # ---------------------------------------------------------------------------
 
 
-def pack_sample_bits(bits: np.ndarray, dtype) -> np.ndarray:
-    """(B, *shape) {0,1} -> (*shape) words with bit b = sample b."""
+def pack_sample_bits(bits: np.ndarray) -> np.ndarray:
+    """(B, *shape) {0,1} -> (W, *shape) uint32 words, ``W = ceil(B/32)``,
+    bit ``b`` of word ``w`` = sample ``32w + b``."""
     pb = np.packbits(np.ascontiguousarray(bits, dtype=np.uint8), axis=0,
                      bitorder="little")
-    w = pb[0].astype(dtype)
-    for g in range(1, pb.shape[0]):
-        w |= pb[g].astype(dtype) << dtype(8 * g)
-    return w
+    W = -(-bits.shape[0] // 32)
+    out = np.zeros((W,) + bits.shape[1:], np.uint32)
+    for g in range(pb.shape[0]):
+        out[g >> 2] |= pb[g].astype(np.uint32) << np.uint32(8 * (g & 3))
+    return out
 
 
 def bernoulli_words(rng: np.random.Generator, p: float, shape: Tuple[int, ...],
-                    B: int, dtype) -> np.ndarray:
-    """Words of independent Bernoulli(p) bits: one realization per crossbar
-    in the chunk (bits >= B are sampled too but never unpacked)."""
+                    B: int) -> np.ndarray:
+    """(W,) + shape words of independent Bernoulli(p) bits: one realization
+    per crossbar in the batch (bits >= B in the last word stay zero — they
+    are never unpacked). The draw is ``rng.random((B,) + shape)`` in
+    *logical* sample order, so same-seed values are independent of the
+    packed layout."""
     if p <= 0.0:
-        return np.zeros(shape, dtype=dtype)
-    return pack_sample_bits(rng.random((B,) + shape) < p, dtype)
+        return np.zeros((-(-B // 32),) + shape, dtype=np.uint32)
+    return pack_sample_bits(rng.random((B,) + shape) < p)
 
 
 # ---------------------------------------------------------------------------
@@ -170,8 +175,8 @@ class FaultRealization:
                     or self.init_flip.any())
 
     def narrow(self, lo: int, hi: int) -> "FaultRealization":
-        """Batch-slice view ``[lo, hi)`` — used when executors chunk a batch
-        wider than one machine word."""
+        """Batch-slice view ``[lo, hi)`` — used by ``max_batch`` span
+        chunking and by the jax fused runner's per-word host loop."""
         return FaultRealization(
             sa0=self.sa0[lo:hi], sa1=self.sa1[lo:hi],
             switch=self.switch[lo:hi], init_flip=self.init_flip[lo:hi])
@@ -200,51 +205,56 @@ class FaultRealization:
                      np.zeros((B, n_cycles, I, rows, cols), dtype=bool))
         return cls(sa0=sa0, sa1=sa1, switch=switch, init_flip=init_flip)
 
-    # -- packed views (bit b of each word = crossbar b), buffer layout -------
+    # -- packed views: canonical (W, ...) uint32 words, bit b = crossbar
+    # -- 32w + b, in the executors' transposed buffer layout ----------------
 
-    def stuck_words(self, dtype) -> Tuple[np.ndarray, np.ndarray]:
-        """(sa0, sa1) packed to the executors' transposed (C+1, R+1) buffer
-        layout, sacrificial lines fault-free (cf. ``sample_stuck_words``)."""
+    def stuck_words(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(sa0, sa1) packed to (W, C+1, R+1) canonical buffer layout,
+        sacrificial lines fault-free (cf. ``sample_stuck_words``)."""
         B, R, C = self.sa0.shape
-        sa0 = np.zeros((C + 1, R + 1), dtype=dtype)
+        W = -(-B // 32)
+        sa0 = np.zeros((W, C + 1, R + 1), dtype=np.uint32)
         sa1 = np.zeros_like(sa0)
-        sa0[:C, :R] = pack_sample_bits(self.sa0, dtype).T
-        sa1[:C, :R] = pack_sample_bits(self.sa1, dtype).T
+        sa0[:, :C, :R] = pack_sample_bits(self.sa0).transpose(0, 2, 1)
+        sa1[:, :C, :R] = pack_sample_bits(self.sa1).transpose(0, 2, 1)
         return sa0, sa1
 
-    def switch_words(self, t: int, slots: np.ndarray, line: int,
-                     dtype) -> np.ndarray:
-        """(len(slots), line) fail words for original cycle ``t``'s ops at
+    def switch_words(self, t: int, slots: np.ndarray, line: int) -> np.ndarray:
+        """(W, len(slots), line) fail words for original cycle ``t``'s ops at
         compile slots ``slots`` over a written line of ``line`` cells."""
-        return pack_sample_bits(self.switch[:, t][:, slots, :line], dtype)
+        return pack_sample_bits(self.switch[:, t][:, slots, :line])
 
-    def init_words(self, t: int, i: int, dtype) -> np.ndarray:
-        """(C+1, R+1) disturb-flip words for init entry ``i`` of cycle ``t``
-        (sacrificial lines never flip)."""
+    def init_words(self, t: int, i: int) -> np.ndarray:
+        """(W, C+1, R+1) disturb-flip words for init entry ``i`` of cycle
+        ``t`` (sacrificial lines never flip)."""
         B, R, C = self.sa0.shape
-        out = np.zeros((C + 1, R + 1), dtype=dtype)
-        out[:C, :R] = pack_sample_bits(self.init_flip[:, t, i], dtype).T
+        out = np.zeros((-(-B // 32), C + 1, R + 1), dtype=np.uint32)
+        out[:, :C, :R] = pack_sample_bits(
+            self.init_flip[:, t, i]).transpose(0, 2, 1)
         return out
 
 
 def sample_stuck_words(
     model: FaultModel, B: int, rows: int, cols: int,
-    rng: np.random.Generator, dtype,
+    rng: np.random.Generator,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Sample per-instance stuck-at maps, packed into executor-buffer shape.
 
-    Returns ``(sa0, sa1)`` of shape ``(cols + 1, rows + 1)`` — the transposed
-    buffer layout of ``engine._pack`` — with the sacrificial extra row/column
-    fault-free (they are simulation artifacts, not physical cells). A cell is
-    stuck-at-0 with ``p_sa0``, stuck-at-1 with ``p_sa1``, exclusively.
+    Returns ``(sa0, sa1)`` of shape ``(W, cols + 1, rows + 1)`` — the
+    canonical transposed buffer layout of ``engine._pack`` — with the
+    sacrificial extra row/column fault-free (they are simulation artifacts,
+    not physical cells). A cell is stuck-at-0 with ``p_sa0``, stuck-at-1
+    with ``p_sa1``, exclusively.
     """
-    sa0 = np.zeros((cols + 1, rows + 1), dtype=dtype)
+    sa0 = np.zeros((-(-B // 32), cols + 1, rows + 1), dtype=np.uint32)
     sa1 = np.zeros_like(sa0)
     if model.p_sa0 > 0.0 or model.p_sa1 > 0.0:
         u = rng.random((B, rows, cols))
-        sa0[:cols, :rows] = pack_sample_bits(u < model.p_sa0, dtype).T
-        sa1[:cols, :rows] = pack_sample_bits(
-            (u >= model.p_sa0) & (u < model.p_sa0 + model.p_sa1), dtype).T
+        sa0[:, :cols, :rows] = pack_sample_bits(
+            u < model.p_sa0).transpose(0, 2, 1)
+        sa1[:, :cols, :rows] = pack_sample_bits(
+            (u >= model.p_sa0) & (u < model.p_sa0 + model.p_sa1)
+        ).transpose(0, 2, 1)
     return sa0, sa1
 
 
@@ -261,61 +271,62 @@ def sample_stuck_words(
 
 
 class _ModelSource:
-    def __init__(self, model: FaultModel, rng, B: int, rows: int, cols: int,
-                 dtype):
+    def __init__(self, model: FaultModel, rng, B: int, rows: int, cols: int):
         self.model = model
         self.rng = as_rng(rng)
-        self.B, self.rows, self.cols, self.dtype = B, rows, cols, dtype
+        self.B, self.rows, self.cols = B, rows, cols
         self.has_switch = model.p_switch > 0.0
 
     def stuck(self) -> Tuple[np.ndarray, np.ndarray]:
         return sample_stuck_words(self.model, self.B, self.rows, self.cols,
-                                  self.rng, self.dtype)
+                                  self.rng)
 
     def switch_col(self, t: int, slots, n: int) -> np.ndarray:
         return bernoulli_words(self.rng, self.model.p_switch,
-                               (n, self.rows + 1), self.B, self.dtype)
+                               (n, self.rows + 1), self.B)
 
     def switch_row(self, t: int, slots, n: int) -> np.ndarray:
         return bernoulli_words(self.rng, self.model.p_switch,
-                               (self.cols + 1, n), self.B, self.dtype)
+                               (self.cols + 1, n), self.B)
 
     def init_flip(self, t: int, i: int, c_idx, r_idx):
         if not self.model.p_init:
             return None
         return bernoulli_words(self.rng, self.model.p_init,
-                               (len(c_idx), len(r_idx)), self.B, self.dtype)
+                               (len(c_idx), len(r_idx)), self.B)
 
 
 class _RealizationSource:
-    def __init__(self, real: FaultRealization, rows: int, cols: int, dtype):
+    def __init__(self, real: FaultRealization, rows: int, cols: int):
         assert real.sa0.shape[1:] == (rows, cols), \
             (real.sa0.shape, rows, cols)
         self.real = real
-        self.rows, self.cols, self.dtype = rows, cols, dtype
+        self.rows, self.cols = rows, cols
         # skipping all-zero masks is an identity — saves the dense packing
         # for stuck-at-only or ideal realizations
         self.has_switch = bool(real.switch.any())
 
     def stuck(self) -> Tuple[np.ndarray, np.ndarray]:
-        return self.real.stuck_words(self.dtype)
+        return self.real.stuck_words()
 
     def switch_col(self, t: int, slots, n: int) -> np.ndarray:
-        return self.real.switch_words(t, slots, self.rows + 1, self.dtype)
+        return self.real.switch_words(t, slots, self.rows + 1)
 
     def switch_row(self, t: int, slots, n: int) -> np.ndarray:
-        return self.real.switch_words(t, slots, self.cols + 1, self.dtype).T
+        return self.real.switch_words(t, slots,
+                                      self.cols + 1).transpose(0, 2, 1)
 
     def init_flip(self, t: int, i: int, c_idx, r_idx):
-        full = self.real.init_words(t, i, self.dtype)
-        return full[np.ix_(c_idx, r_idx)]
+        full = self.real.init_words(t, i)
+        return full[(slice(None),) + np.ix_(c_idx, r_idx)]
 
 
-def make_fault_source(faults, rng, B: int, rows: int, cols: int, dtype):
+def make_fault_source(faults, rng, B: int, rows: int, cols: int):
     """``None`` | :class:`FaultModel` | :class:`FaultRealization` → source
-    (or ``None`` for fault-free execution)."""
+    (or ``None`` for fault-free execution). Every mask the source yields is
+    in the canonical (W, ...) uint32 packed layout."""
     if faults is None:
         return None
     if isinstance(faults, FaultRealization):
-        return _RealizationSource(faults, rows, cols, dtype)
-    return _ModelSource(faults, rng, B, rows, cols, dtype)
+        return _RealizationSource(faults, rows, cols)
+    return _ModelSource(faults, rng, B, rows, cols)

@@ -20,10 +20,11 @@ placement decision, not a separate code path.
 
 Chunking: a batch of B crossbars becomes S word-packed chunks, S a multiple
 of the device count with per-chunk widths balanced to ``ceil(B/S)`` — e.g.
-20 tiles on 8 devices pack as widths ``[3,3,3,3,2,2,2,2]`` (uint8 words), so
-no device idles and no zero-padding chunk is simulated. The per-chunk word
-dtype shrinks to fit the widest chunk, exactly like the single-device jax
-path shrinks its word to the batch.
+20 tiles on 8 devices pack as widths ``[3,3,3,3,2,2,2,2]``, so no device
+idles and no zero-padding chunk is simulated. Every chunk is one canonical
+uint32 word (widths are capped at ``engine.WORD_BITS``), so the vmapped body
+is the SAME per-word transition the single-device runners jit — one layout
+across the whole stack.
 
 On a multi-core host the devices execute concurrently; on a single-core CI
 host XLA time-shares them, so wall clock measures the *serialized* sum while
@@ -44,7 +45,8 @@ from ..obs.trace import span as _span
 # mesh axis name tile_mesh() creates
 TILE_AXIS = "tiles"
 
-# widest packed chunk the sharded path emits (one jax word)
+# widest packed chunk the sharded path emits (one canonical uint32 word,
+# == engine.WORD_BITS)
 MAX_CHUNK = 32
 
 
@@ -83,10 +85,10 @@ def chunk_widths(B: int, D: int, cap: int = MAX_CHUNK) -> List[int]:
     return [base + 1 if i < rem else base for i in range(S)]
 
 
-def _sharded_runner(cp, mesh, variant: str, np_dtype, spec):
-    """jit(shard_map(vmap(body))) over a stacked (S, C+1, R+1) chunk buffer,
-    memoized on ``cp._caches`` per (variant, dtype, mesh)."""
-    key = ("jax_sharded", variant, np.dtype(np_dtype).name, mesh)
+def _sharded_runner(cp, mesh, variant: str, spec):
+    """jit(shard_map(vmap(body))) over a stacked (S, C+1, R+1) uint32 chunk
+    buffer, memoized on ``cp._caches`` per (variant, mesh)."""
+    key = ("jax_sharded", variant, mesh)
     fn = cp._caches.get(key)
     if fn is not None:
         return fn
@@ -95,10 +97,10 @@ def _sharded_runner(cp, mesh, variant: str, np_dtype, spec):
 
     if variant == "fused":
         from ..core.fused import jax_fused_body
-        body = jax_fused_body(cp, np_dtype)
+        body = jax_fused_body(cp)
     else:
         from ..core.engine import jax_unfused_body
-        body = jax_unfused_body(cp, np_dtype)
+        body = jax_unfused_body(cp)
     fn = jax.jit(shard_map(jax.vmap(body), mesh=mesh, in_specs=(spec,),
                            out_specs=spec, check_rep=False))
     cp._caches[key] = fn
@@ -114,7 +116,7 @@ def try_run_sharded(cp, mem: np.ndarray, variant: str, mesh
     ``resolve_spec`` replicates the chunk axis) — the engine then falls back
     to its single-device chunk loop, bit-identically.
     """
-    from ..core.engine import _pack, _unpack, _word_dtype
+    from ..core.engine import _pack, _unpack
     from .sharding import resolve_spec
 
     D = mesh_devices(mesh)
@@ -122,25 +124,24 @@ def try_run_sharded(cp, mem: np.ndarray, variant: str, mesh
     if D <= 1 or B < D:
         return None
     widths = chunk_widths(B, D)
-    dtype = _word_dtype(max(widths))
     C1, R1 = cp.cols + 1, cp.rows + 1
     spec = resolve_spec((TILE_AXIS, None, None), (len(widths), C1, R1),
                         mesh, rules={TILE_AXIS: TILE_AXIS})
     if not spec or spec[0] != TILE_AXIS:    # replicated -> nothing to gain
         return None
     with _span("engine.sharded", devices=D, chunks=len(widths),
-               batch=B, dtype=np.dtype(dtype).name, variant=variant):
-        bufs = np.zeros((len(widths), C1, R1), dtype)
+               batch=B, variant=variant):
+        bufs = np.zeros((len(widths), C1, R1), np.uint32)
         off = 0
         for i, wd in enumerate(widths):
-            bufs[i] = _pack(mem[off:off + wd], dtype)
+            bufs[i] = _pack(mem[off:off + wd])[0]    # widths <= WORD_BITS
             off += wd
-        fn = _sharded_runner(cp, mesh, variant, dtype, spec)
+        fn = _sharded_runner(cp, mesh, variant, spec)
         out = np.asarray(fn(bufs))
         res = np.empty((B, cp.rows, cp.cols), np.uint8)
         off = 0
         for i, wd in enumerate(widths):
-            res[off:off + wd] = _unpack(out[i], wd, cp.rows, cp.cols)
+            res[off:off + wd] = _unpack(out[i][None], wd, cp.rows, cp.cols)
             off += wd
     _metrics.counter("engine.sharded.calls").inc()
     _metrics.gauge("engine.sharded.devices").set(D)

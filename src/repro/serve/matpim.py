@@ -66,10 +66,30 @@ from .plan_store import PlanStore, get_default_store
 def bucket_up(v: int, floor: int = 8) -> int:
     """Round ``v`` up to the service's power-of-two shape buckets.
 
+    Both the value and the floor must be positive — a non-positive size is
+    always a caller bug (an empty operand or a misconfigured service), and
+    silently bucketing it would compile a plan for a shape that can never
+    be executed.
+
     >>> bucket_up(3), bucket_up(8), bucket_up(9), bucket_up(100)
     (8, 8, 16, 128)
+    >>> bucket_up(5, floor=1)
+    8
+    >>> bucket_up(0)
+    Traceback (most recent call last):
+        ...
+    ValueError: bucket_up: size must be positive, got 0
+    >>> bucket_up(4, floor=-2)
+    Traceback (most recent call last):
+        ...
+    ValueError: bucket_up: floor must be positive, got -2
     """
-    return max(floor, 1 << (int(v) - 1).bit_length())
+    v, floor = int(v), int(floor)
+    if v < 1:
+        raise ValueError(f"bucket_up: size must be positive, got {v}")
+    if floor < 1:
+        raise ValueError(f"bucket_up: floor must be positive, got {floor}")
+    return max(floor, 1 << (v - 1).bit_length())
 
 
 @dataclasses.dataclass
@@ -348,13 +368,12 @@ class PlanService:
         if backend in ("numpy", "auto", "numpy-fused", "numpy-unfused"):
             prewarm_replay(cp)
         if backend in ("jax", "jax-fused", "jax-unfused", "auto"):
-            from ..core.engine import JAX_WORD_BITS, execute, have_jax
+            from ..core.engine import execute, have_jax
             if have_jax():
-                # one word-wide dummy batch jits the runner at the word dtype
-                # real buckets use; the run itself is a few ms on top
-                B = min(JAX_WORD_BITS,
-                        self.max_batch or JAX_WORD_BITS)
-                dummy = np.zeros((B, cp.rows, cp.cols), dtype=np.uint8)
+                # a B=1 dummy jits THE canonical per-word runner — batch
+                # polymorphic, so this one warm serves every bucket; the run
+                # itself is a few ms on top
+                dummy = np.zeros((1, cp.rows, cp.cols), dtype=np.uint8)
                 execute(cp, dummy, backend="jax" if backend == "auto"
                         else backend, max_batch=self.max_batch)
         return time.perf_counter() - t0

@@ -91,8 +91,10 @@ def test_topology_keys_are_isolated(tmp_path):
 
 def test_schema1_table_loads_as_topo1_heuristic(tmp_path):
     """Pre-topology (schema 1) tables were measured before the topology
-    axis existed: they load as usable topo-1 *heuristic* hints, never as
-    authoritative measurements, and never resolve sharded executes."""
+    axis existed: they load as usable topo-1 *heuristic* hints with their
+    legacy pow2 bucket re-derived as a word bucket (32 crossbars -> 1
+    word), never as authoritative measurements, and never resolve sharded
+    executes."""
     p = tmp_path / "tunings.json"
     p.write_text(json.dumps({
         "schema": 1,
@@ -100,9 +102,10 @@ def test_schema1_table_loads_as_topo1_heuristic(tmp_path):
                                "max_batch": None, "source": "measured"}}}))
     t = at.TuningTable(p)
     assert t.load_error is None and len(t) == 1
-    e = t.lookup("KEY", 32)
+    e = t.lookup("KEY", at.batch_bucket(32))    # legacy 32 -> word bucket 1
     assert e is not None and e.source == "heuristic"
-    assert t.lookup("KEY", 32, topo=8) is None
+    assert t.lookup("KEY", 32) is None          # old key shape is gone
+    assert t.lookup("KEY", 1, topo=8) is None
 
     plan, _, _, _ = _bmv_fixture()
     cp = plan.compile()
@@ -115,6 +118,38 @@ def test_schema1_table_loads_as_topo1_heuristic(tmp_path):
     from repro.core.engine import have_jax
     if have_jax():
         assert be8.startswith("jax")   # sharding needs a jax variant
+
+
+def test_schema2_buckets_rederive_keep_fastest(tmp_path):
+    """Schema-2 tables bucketed by pow2 crossbar counts; loading re-derives
+    word buckets (ceil/32), demotes entries to heuristic hints, and keeps
+    only the fastest measurement when legacy buckets collapse onto the
+    same word bucket."""
+    p = tmp_path / "tunings.json"
+    p.write_text(json.dumps({
+        "schema": 2,
+        "entries": {
+            # buckets 8 and 32 both collapse to word bucket 1
+            "KEY|8|1": {"backend": "jax-fused", "us": 90.0,
+                        "max_batch": None, "source": "measured"},
+            "KEY|32|1": {"backend": "numpy-unfused", "us": 40.0,
+                         "max_batch": None, "source": "measured"},
+            # bucket 64 -> word bucket 2, keeps its own row
+            "KEY|64|1": {"backend": "numpy-unfused", "us": 70.0,
+                         "max_batch": at.CHUNK_BATCH, "source": "measured"},
+            # topology axis survives conversion
+            "KEY|32|8": {"backend": "jax-fused", "us": 400.0,
+                         "max_batch": None, "source": "measured"},
+        }}))
+    t = at.TuningTable(p)
+    assert t.load_error is None and len(t) == 3
+    e = t.lookup("KEY", 1)
+    assert (e.backend, e.us, e.source) == ("numpy-unfused", 40.0, "heuristic")
+    e = t.lookup("KEY", 2)
+    assert (e.backend, e.max_batch, e.source) == \
+        ("numpy-unfused", at.CHUNK_BATCH, "heuristic")
+    assert t.lookup("KEY", 1, topo=8).backend == "jax-fused"
+    assert t.lookup("KEY", 32) is None and t.lookup("KEY", 64) is None
 
 
 @pytest.mark.parametrize("payload", [
@@ -275,7 +310,7 @@ def test_autotune_execute_records_winner():
     t = at.TuningTable()
     mems = np.broadcast_to(mem, (4,) + mem.shape).copy()
     res, entry = at.autotune_execute(cp, mems, t, reps=1, save=False)
-    assert t.lookup(at.program_key(cp), 4) is entry
+    assert t.lookup(at.program_key(cp), at.batch_bucket(4)) is entry
     assert entry.source == "measured" and entry.us > 0
     assert dict(at.candidates(cp, 4, cheap=True)).get(
         entry.backend, "missing") == entry.max_batch

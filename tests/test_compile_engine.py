@@ -14,7 +14,7 @@ from repro.core import (BinaryConvPlan, BinaryMatvecPlan, ConvPlan,
                         compile_program, execute, have_jax)
 from repro.core.compile import GATE_IDS
 from repro.core.crossbar import init_rect
-from repro.core.engine import BIT_GATES, _pack, _unpack, _word_dtype
+from repro.core.engine import BIT_GATES, _pack, _unpack, word_count
 from repro.core.isa import GATES, ColOp, InitOp, RowOp
 
 BACKENDS = ["numpy"] + (["jax"] if have_jax() else [])
@@ -54,12 +54,16 @@ def test_bit_gates_match_isa_exhaustively():
             assert got == want, (name, bits)
 
 
-@pytest.mark.parametrize("B", [1, 3, 8, 9, 17, 33, 64])
+@pytest.mark.parametrize("B", [1, 3, 8, 9, 17, 33, 64, 65, 128])
 def test_bitplane_pack_roundtrip(B):
     rng = np.random.default_rng(B)
     mem = (rng.random((B, 12, 20)) < 0.5).astype(np.uint8)
-    buf = _pack(mem, _word_dtype(B))
+    buf = _pack(mem)
+    assert buf.shape == (word_count(B), 21, 13) and buf.dtype == np.uint32
     np.testing.assert_array_equal(_unpack(buf, B, 12, 20), mem)
+    # unused high bits of the last word stay zero (canonical invariant)
+    if B % 32:
+        assert not (buf[-1] >> np.uint32(B % 32)).any()
 
 
 # -- micro-program equivalence ------------------------------------------------

@@ -152,15 +152,19 @@ def test_fault_realizations_independent_per_batch_slot():
 
 def test_sampling_helpers():
     rng = np.random.default_rng(0)
-    w = bernoulli_words(rng, 0.0, (4, 5), 16, np.uint16)
-    assert w.shape == (4, 5) and not w.any()
-    sa0, sa1 = sample_stuck_words(FaultModel(p_sa0=0.5, p_sa1=0.5), 16,
-                                  6, 10, rng, np.uint16)
+    w = bernoulli_words(rng, 0.0, (4, 5), 16)
+    assert w.shape == (1, 4, 5) and w.dtype == np.uint32 and not w.any()
+    assert bernoulli_words(rng, 0.0, (2,), 40).shape == (2, 2)
+    sa0, sa1 = sample_stuck_words(FaultModel(p_sa0=0.5, p_sa1=0.5), 48,
+                                  6, 10, rng)
+    assert sa0.shape == (2, 11, 7)               # W = ceil(48/32) = 2 words
     assert not (sa0 & sa1).any()                 # exclusive stuck states
-    assert not sa0[10].any() and not sa0[:, 6].any()   # extras fault-free
-    assert not sa1[10].any() and not sa1[:, 6].any()
-    full = (sa0 | sa1)[:10, :6]
-    assert (full == np.uint16((1 << 16) - 1)).all()    # p0+p1=1 covers all
+    assert not sa0[:, 10].any() and not sa0[:, :, 6].any()  # extras clean
+    assert not sa1[:, 10].any() and not sa1[:, :, 6].any()
+    full = (sa0 | sa1)[:, :10, :6]
+    ones = np.uint32(0xFFFFFFFF)
+    assert (full[0] == ones).all()               # p0+p1=1 covers all bits
+    assert (full[1] == np.uint32(0xFFFF)).all()  # last word: 48-32=16 bits
 
 
 def test_fault_model_validation():

@@ -197,7 +197,8 @@ def test_compile_and_autotune_resolve_metrics():
     be, mb, src = resolve_auto(cp, 2, table=table)
     assert src == "heuristic"
     assert metrics.counter("autotune.resolve.heuristic").value == 1
-    table.record(program_key(cp), 2, be, 100.0)
+    from repro.core.autotune import batch_bucket
+    table.record(program_key(cp), batch_bucket(2), be, 100.0)
     _, _, src = resolve_auto(cp, 2, table=table)
     assert src == "measured"
     assert metrics.counter("autotune.resolve.measured").value == 1
@@ -371,6 +372,10 @@ def test_slo_sweep_rows_pass_schema_validation(tmp_path):
     wr = payload["warm_restart"]          # store replay ran compile-free
     assert wr["compile_programs"] == 0
     assert wr["store_hits"] == wr["misses"] > 0
+    # batch-polymorphic runners: the replay builds some, the second replay
+    # of identical traffic on the warm service builds none
+    assert wr["runner_builds"] >= 1
+    assert wr["runner_rebuilds"] == 0
     for r in payload["rows"]:
         assert r["requests"] == 6
         assert 0 <= r["hit_rate"] <= 1
@@ -382,14 +387,15 @@ def test_slo_sweep_rows_pass_schema_validation(tmp_path):
 
 def test_slo_schema_validator_catches_breakage():
     from benchmarks.report import validate_slo
-    ok = {"schema": 1, "bench": "slo",
+    ok = {"schema": 2, "bench": "slo",
           "cold_start": {"warm_wall_s": 1.0, "compile_s": 0.5,
                          "warmup_s": 0.2, "store_hits": 0},
           "warm_restart": {"requests": 3, "replay_wall_s": 0.5,
                            "first_batch_ms": 2.0, "steady_p95_ms": 2.0,
                            "compile_s": 0.01, "warmup_s": 0.0,
                            "store_hits": 2, "misses": 2,
-                           "compile_programs": 0, "p50_ms": 1.0,
+                           "compile_programs": 0, "runner_builds": 2,
+                           "runner_rebuilds": 0, "p50_ms": 1.0,
                            "p95_ms": 2.0, "p99_ms": 3.0},
           "rows": [
               {"mode": m, "load_factor": lf, "offered_rps": off,
@@ -414,7 +420,10 @@ def test_slo_schema_validator_catches_breakage():
     bad = json.loads(json.dumps(ok))
     del bad["cold_start"]["compile_s"]
     assert any("cold_start" in e for e in validate_slo(bad))
-    assert validate_slo({"schema": 2, "bench": "slo", "rows": []})
+    bad = json.loads(json.dumps(ok))
+    del bad["warm_restart"]["runner_rebuilds"]   # v2 keys are mandatory
+    assert any("missing keys" in e for e in validate_slo(bad))
+    assert validate_slo({"schema": 1, "bench": "slo", "rows": []})
 
 
 def test_trace_report_self_time(tmp_path):

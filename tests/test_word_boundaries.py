@@ -1,0 +1,139 @@
+"""Word-boundary batches under the canonical packed layout.
+
+Before the canonical layout the engine packed batches into the narrowest
+word dtype (uint8/16/32/64 by bucket), so batch sizes straddling a dtype
+boundary (8 -> 9, 32 -> 33, 64 -> 65) switched packing code paths AND
+runner cache keys — exactly where layout bugs hide and where every batch
+bucket paid its own jit. Now every batch packs into ``W = ceil(B/32)``
+uint32 words and each program owns ONE batch-polymorphic runner per
+backend. This suite pins both halves of that contract:
+
+* cross-backend conformance at the straddling batch sizes (bit-identical
+  memory/cycles/stats against the per-op interpreter), and
+* a regression guard that the ``engine.runner_cache.builds`` counter
+  grows by at most one runner per (program, backend) however many batch
+  sizes execute — the property that makes warm restarts cheap.
+"""
+import numpy as np
+import pytest
+from test_conformance import interp_reference, random_program
+
+from repro.core import compile_program, execute, have_jax
+from repro.core.engine import WORD_BITS, word_count
+from repro.device.faults import FaultModel, FaultRealization
+from repro.obs.metrics import counter, reset_metrics
+
+# every boundary the legacy word-dtype buckets had (8->9, 32->33, 64->65),
+# plus the endpoints the acceptance bar names
+BOUNDARY_BATCHES = (1, 8, 9, 32, 33, 64, 65, 128)
+
+BACKENDS = ["numpy-unfused", "numpy-fused"] + (
+    ["jax-unfused", "jax-fused"] if have_jax() else [])
+
+
+def _fixture(seed=7):
+    prog, rows, cols, parts = random_program(seed)
+    cp = compile_program(prog, rows, cols, parts, parts)
+    return prog, rows, cols, parts, cp
+
+
+def _mems(rows, cols, B, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.random((B, rows, cols)) < 0.5).astype(np.uint8)
+
+
+# -- conformance across the old dtype boundaries ------------------------------
+
+
+@pytest.mark.parametrize("B", BOUNDARY_BATCHES)
+def test_boundary_batches_bit_identical(B):
+    """Every backend agrees with the interpreter at each straddling batch
+    size — memory, cycles and stats."""
+    prog, rows, cols, parts, cp = _fixture()
+    mems = _mems(rows, cols, B, seed=B)
+    ref, cycles, stats = interp_reference(prog, rows, cols, parts, mems)
+    for backend in BACKENDS:
+        res = execute(cp, mems, backend=backend)
+        np.testing.assert_array_equal(res.mem, ref,
+                                      err_msg=f"{backend} B={B}")
+        assert res.cycles == cycles and res.stats == stats, (backend, B)
+
+
+@pytest.mark.parametrize("B", [8, 9, 33, 65])
+def test_boundary_batches_fault_realization_identical(B):
+    """Pinned fault masks execute bit-identically on every faulty backend
+    even when the batch spans multiple packed words."""
+    prog, rows, cols, parts, cp = _fixture(seed=11)
+    mems = _mems(rows, cols, B, seed=100 + B)
+    fm = FaultModel(p_sa0=0.01, p_sa1=0.01, p_switch=0.03, p_init=0.03)
+    fr = FaultRealization.sample(fm, B, rows, cols, cp.n_cycles, cp.W,
+                                 cp.I, rng=B)
+    faulty = ["numpy-unfused", "numpy-fused"] + (
+        ["jax-fused"] if have_jax() else [])
+    ref = execute(cp, mems, backend=faulty[0], faults=fr).mem
+    for backend in faulty[1:]:
+        got = execute(cp, mems, backend=backend, faults=fr).mem
+        np.testing.assert_array_equal(got, ref, err_msg=f"{backend} B={B}")
+
+
+def test_word_count_at_boundaries():
+    assert WORD_BITS == 32
+    assert [word_count(B) for B in BOUNDARY_BATCHES] == \
+        [1, 1, 1, 1, 2, 2, 3, 4]
+
+
+# -- one runner per (program, backend), however many batch sizes --------------
+
+
+def test_one_runner_build_per_program_and_backend():
+    """Sweeping every boundary batch size builds each backend's runner
+    exactly once: the canonical layout makes runners batch-polymorphic, so
+    the builds counter must not scale with the number of batch buckets."""
+    prog, rows, cols, parts, cp = _fixture(seed=3)
+    reset_metrics()
+    try:
+        builds = counter("engine.runner_cache.builds")
+        per_backend = {}
+        for backend in BACKENDS:
+            base = builds.value
+            for B in BOUNDARY_BATCHES:
+                execute(cp, _mems(rows, cols, B, seed=B), backend=backend)
+            per_backend[backend] = builds.value - base
+        # numpy executors memoize one replay plan; jax executors memoize one
+        # jitted body + its runner wrapper. Either way the count is a small
+        # constant independent of how many batch sizes ran — re-running the
+        # whole sweep must add nothing at all.
+        for backend, n in per_backend.items():
+            assert 1 <= n <= 2, (backend, n, "runner builds must be O(1)")
+        base = builds.value
+        for backend in BACKENDS:
+            for B in BOUNDARY_BATCHES:
+                execute(cp, _mems(rows, cols, B, seed=B), backend=backend)
+        assert builds.value == base, "warm re-sweep rebuilt a runner"
+    finally:
+        reset_metrics()
+
+
+def test_runner_cache_size_and_eviction_metrics():
+    """The RunnerCache exposes its occupancy and eviction churn through the
+    ``engine.runner_cache.*`` registry namespace. The size gauge aggregates
+    across every live cache in the process (each compiled program owns
+    one), so the assertions are deltas, not absolutes."""
+    from repro.core.compile import RunnerCache
+    from repro.obs.metrics import gauge
+    reset_metrics()
+    try:
+        c = RunnerCache(max_entries=2, metrics="engine.runner_cache")
+        c[("a",)] = 1
+        v1 = gauge("engine.runner_cache.size").value
+        c[("b",)] = 2
+        assert counter("engine.runner_cache.builds").value == 2
+        assert counter("engine.runner_cache.builds.a").value == 1
+        assert gauge("engine.runner_cache.size").value == v1 + 1
+        c[("c",)] = 3                       # evicts the oldest entry
+        assert counter("engine.runner_cache.evictions").value == 1
+        assert gauge("engine.runner_cache.size").value == v1 + 1
+        c.clear()
+        assert gauge("engine.runner_cache.size").value == v1 - 1
+    finally:
+        reset_metrics()

@@ -107,7 +107,7 @@ def main(argv=None) -> int:
         # executor artifacts for this trace are no longer needed
         cp.clear_caches()
     table.save()
-    keys = {k for k, _ in table.entries()}
+    keys = {k for k, _, _ in table.entries()}
     print(f"\nwrote {len(table)} entries ({len(keys)} program keys) to "
           f"{args.out} in {time.perf_counter()-t_start:.1f}s")
     print("consume with: MATPIM_TUNINGS="
